@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: timing + tiny-training harness.
+
+All paper-table benchmarks train *reduced-width* models on the procedural
+datasets (offline container, DESIGN.md §6) — table structure and trends
+reproduce the paper; absolute accuracies are synthetic-data numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ZebraConfig
+from repro.data import ImageDatasetConfig, SYN_CIFAR10, SYN_TINYIMAGENET
+from repro.optim import sgd, step_decay
+from repro.train import CNNTrainer, CNNTrainConfig
+
+QUICK = {"steps": 80, "width": 0.125, "batch": 32, "eval_batches": 2}
+FULL = {"steps": 600, "width": 0.5, "batch": 64, "eval_batches": 8}
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """us per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def train_cnn(model: str, dataset: ImageDatasetConfig, t_obj: float,
+              budget: dict, zebra_on: bool = True, ns_rho: float = 0.0,
+              block_hw: int = 4, seed: int = 0):
+    zcfg = ZebraConfig(enabled=zebra_on, t_obj=t_obj, block_hw=block_hw)
+    cfg = CNNTrainConfig(model=model, width_mult=budget["width"],
+                         dataset=dataset, batch=budget["batch"],
+                         steps=budget["steps"], zebra=zcfg, ns_rho=ns_rho,
+                         seed=seed)
+    tr = CNNTrainer(cfg, sgd(step_decay(0.05, total_steps=budget["steps"])))
+    state, hist = tr.train(log_every=max(budget["steps"] // 3, 1))
+    return tr, state, hist
+
+
+def eval_row(tr, state, budget):
+    ev = tr.evaluate(state["variables"], batches=budget["eval_batches"],
+                     batch=64)
+    return {"reduced_bandwidth_pct": round(ev["reduced_bandwidth_pct"], 1),
+            "acc_pct": round(100 * ev["acc"], 2),
+            "top5_pct": round(100 * ev["top5"], 2),
+            "zero_frac": round(ev["zero_frac"], 3)}
+
+
+def emit(rows, name):
+    """Print one benchmark's rows as the required CSV."""
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{r.get('us_per_call', 0):.1f},{derived}",
+              flush=True)

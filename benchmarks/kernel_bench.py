@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks (interpret mode on CPU: correctness-grade timing;
+the `derived` column carries the structural numbers that matter on TPU —
+bytes saved per call and MXU-block skip fraction)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import zebra_mask_op, zebra_spmm_op
+from repro.kernels import ref
+from .common import emit, timeit
+
+
+def run(budget=None, quick=True) -> list[dict]:
+    rows = []
+    M, K, N, bs, bc = 256, 1024, 512, 8, 128
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    live = (jax.random.uniform(jax.random.PRNGKey(1), (M // bs, K // bc)) < 0.4)
+    x = x * jnp.repeat(jnp.repeat(live.astype(jnp.float32), bs, 0), bc, 1) * 2 + x * 0.01
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+
+    t_ref = timeit(lambda: ref.zebra_mask_ref(x, 0.5, bs, bc), iters=20)
+    t_ker = timeit(lambda: zebra_mask_op(x, 0.5, bs=bs, bc=bc), iters=5)
+    y, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    zf = 1 - float(np.mean(np.asarray(bm)))
+    saved = zf * M * K * 2                                  # bf16 bytes saved
+    rows.append({"name": "kernel/zebra_mask", "us_per_call": t_ker,
+                 "ref_us": round(t_ref, 1), "zero_frac": round(zf, 3),
+                 "hbm_bytes_saved_per_call": int(saved),
+                 "index_bytes": (M // bs) * (K // bc)})
+
+    t_spmm = timeit(lambda: zebra_spmm_op(x, w, bm, bs=bs, bc=bc), iters=3)
+    t_dense = timeit(lambda: (x @ w), iters=20)
+    rows.append({"name": "kernel/zebra_spmm", "us_per_call": t_spmm,
+                 "dense_matmul_us": round(t_dense, 1),
+                 "mxu_blocks_skipped_frac": round(zf, 3),
+                 "flops_skipped": int(zf * 2 * M * K * N)})
+    emit(rows, "kernels")
+    return rows

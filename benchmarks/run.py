@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,table5]
+
+Prints ``name,us_per_call,derived`` CSV per row. Training-based tables use
+reduced-width models on procedural data (offline container); Table V,
+kernels and the roofline table are exact accounting.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full grids + longer training budgets")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,table5,"
+                         "kernels,roofline")
+    args = ap.parse_args()
+
+    from . import (kernel_bench, roofline, table1_zero_blocks, table2_cifar,
+                   table3_tinyimagenet, table4_ablation, table5_overhead)
+    from .common import FULL, QUICK
+
+    budget = FULL if args.full else QUICK
+    quick = not args.full
+    benches = {
+        "table5": lambda: table5_overhead.run(budget, quick),
+        "kernels": lambda: kernel_bench.run(budget, quick),
+        "roofline": lambda: roofline.run(budget, quick),
+        "table1": lambda: table1_zero_blocks.run(budget),
+        "table2": lambda: table2_cifar.run(budget, quick),
+        "table3": lambda: table3_tinyimagenet.run(budget, quick),
+        "table4": lambda: table4_ablation.run(budget, quick),
+    }
+    only = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in only:
+        print(f"# --- {name} ---", flush=True)
+        benches[name]()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table II: bandwidth reduction vs accuracy on (syn-)CIFAR-10 for
+VGG16 / ResNet-18 / ResNet-56 / MobileNet across T_obj, incl. WP/NS
+combinations. Quick mode runs a representative subset of rows."""
+from __future__ import annotations
+
+from repro.data import SYN_CIFAR10
+from .common import emit, eval_row, train_cnn
+
+
+def _row(model, t_obj, budget, tag, **kw):
+    tr, state, _ = train_cnn(model, SYN_CIFAR10, t_obj, budget, **kw)
+    r = {"name": f"table2/{model}/{tag}", "t_obj": t_obj}
+    r.update(eval_row(tr, state, budget))
+    return r
+
+
+def _combo_row(model, t_obj, budget, method, frac):
+    """WP/NS combos per paper §III.A: prune a trained model, retrain w/ Zebra."""
+    tr, state, _ = train_cnn(model, SYN_CIFAR10, t_obj, budget,
+                             ns_rho=1e-4 if method == "ns" else 0.0)
+    if method == "wp":
+        sp = tr.apply_weight_pruning(state["variables"], frac)
+    else:
+        sp = tr.apply_network_slimming(state["variables"], frac)
+    state, _ = tr.train(steps=budget["steps"] // 2, state=state,
+                        log_every=budget["steps"])
+    r = {"name": f"table2/{model}/zebra+{method}{int(frac*100)}",
+         "t_obj": t_obj, "pruned_frac": round(sp, 3)}
+    r.update(eval_row(tr, state, budget))
+    return r
+
+
+def run(budget, quick=True) -> list[dict]:
+    rows = []
+    grid = ([("vgg16", (0.0, 0.1)), ("resnet18", (0.0, 0.2)),
+             ("resnet56", (0.05,)), ("mobilenet", (0.1,))] if quick else
+            [("vgg16", (0.0, 0.05, 0.1, 0.15)),
+             ("resnet18", (0.0, 0.1, 0.2)),
+             ("resnet56", (0.0, 0.05, 0.15)),
+             ("mobilenet", (0.0, 0.1, 0.15))])
+    for model, tobjs in grid:
+        for t in tobjs:
+            rows.append(_row(model, t, budget, f"t{t}"))
+    # one WP and one NS combination row (paper: +NS helps, +WP doesn't)
+    rows.append(_combo_row("resnet18", 0.2, budget, "ns", 0.2))
+    rows.append(_combo_row("resnet18", 0.2, budget, "wp", 0.2))
+    emit(rows, "table2")
+    return rows

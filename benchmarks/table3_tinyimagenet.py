@@ -1,0 +1,19 @@
+"""Paper Table III: ResNet-18 on (syn-)Tiny-ImageNet, block size 8,
+bandwidth reduction & top1/top5 across sparsity targets T_obj."""
+from __future__ import annotations
+
+from repro.data import SYN_TINYIMAGENET
+from .common import emit, eval_row, train_cnn
+
+
+def run(budget, quick=True) -> list[dict]:
+    rows = []
+    tobjs = (0.0, 0.2) if quick else (0.0, 0.1, 0.15, 0.2, 0.4)
+    for t in tobjs:
+        tr, state, _ = train_cnn("resnet18", SYN_TINYIMAGENET, t,
+                                 budget, block_hw=8)
+        r = {"name": f"table3/resnet18/t{t}", "t_obj": t, "block": 8}
+        r.update(eval_row(tr, state, budget))
+        rows.append(r)
+    emit(rows, "table3")
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Table IV / Fig. 5: ablation — NS alone vs Zebra alone vs Zebra+NS
+(the paper's claim: NS composes synergistically with Zebra)."""
+from __future__ import annotations
+
+from repro.data import SYN_CIFAR10
+from .common import emit, eval_row, train_cnn
+
+
+def run(budget, quick=True) -> list[dict]:
+    rows = []
+    model, t_obj, ns_frac = "resnet18", 0.2, 0.2
+
+    # NS only (sparsity-train, slim, retrain; Zebra off)
+    tr, state, _ = train_cnn(model, SYN_CIFAR10, 0.0, budget,
+                             zebra_on=False, ns_rho=1e-4)
+    tr.apply_network_slimming(state["variables"], ns_frac)
+    state, _ = tr.train(steps=budget["steps"] // 2, state=state,
+                        log_every=budget["steps"])
+    r = {"name": "table4/ns_only"}
+    r.update(eval_row(tr, state, budget))
+    # NS-only bandwidth saving: pruned channels' maps are never written
+    rows.append(r)
+
+    # Zebra only
+    tr, state, _ = train_cnn(model, SYN_CIFAR10, t_obj, budget)
+    r = {"name": "table4/zebra_only", "t_obj": t_obj}
+    r.update(eval_row(tr, state, budget))
+    rows.append(r)
+
+    # Zebra + NS
+    tr, state, _ = train_cnn(model, SYN_CIFAR10, t_obj, budget, ns_rho=1e-4)
+    tr.apply_network_slimming(state["variables"], ns_frac)
+    state, _ = tr.train(steps=budget["steps"] // 2, state=state,
+                        log_every=budget["steps"])
+    r = {"name": "table4/zebra_plus_ns", "t_obj": t_obj}
+    r.update(eval_row(tr, state, budget))
+    rows.append(r)
+
+    emit(rows, "table4")
+    return rows

@@ -1,0 +1,44 @@
+"""End-to-end serving driver: build a ~100M-param gemma3-family model,
+prefill a batch of prompts and decode with the sharded KV cache + Zebra
+KV-cache block compression (the decode-bandwidth analogue of the paper).
+
+    PYTHONPATH=src python examples/lm_serve.py [--batch 4] [--gen 24]
+
+This drives exactly the production `repro.launch.serve` path.
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+import repro.configs as configs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    # ~100M-class member of the gemma3 family (6 layers of the 5:1 pattern)
+    base = configs.get("gemma3-4b")
+    cfg = base.replace(n_layers=6, d_model=512, n_heads=8, n_kv_heads=4,
+                       d_ff=1536, vocab=32768, window=64, attn_chunk=64)
+    n = cfg.param_counts()["total"]
+    print(f"serving {cfg.name}-mini: {n/1e6:.1f}M params "
+          f"(pattern {cfg.layer_pattern})")
+
+    import types
+    mod = types.SimpleNamespace(CONFIG=cfg, reduced=lambda: cfg)
+    configs._ARCH_MODULES["gemma3-mini"] = "gemma3_4b"
+    orig = configs._mod
+    configs._mod = lambda a: mod if a == "gemma3-mini" else orig(a)
+
+    sys.argv = ["serve", "--arch", "gemma3-mini", "--reduced",
+                "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen), "--t-obj", "0.05"]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

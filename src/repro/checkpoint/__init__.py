@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing (DESIGN.md §5).
+
+Format: one ``.npz`` per host shard holding flattened leaves keyed by
+path-string, plus ``manifest.json`` (step, pytree structure, leaf paths,
+host count). Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to
+``<dir>/step_<step>`` — atomic on POSIX, so a job killed mid-save never
+corrupts the restore point. ``keep_last`` old checkpoints are retained.
+
+Async mode ships the device->host copy synchronously (cheap) and the disk
+write on a background thread so the train loop isn't blocked (the thread is
+joined before the next save or at close).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))) for p in path)
+        arr = np.asarray(leaf)
+        _NATIVE = (np.float64, np.float32, np.float16, np.int64, np.int32,
+                   np.int16, np.int8, np.uint8, np.uint16, np.uint32,
+                   np.uint64, np.bool_)
+        if arr.dtype not in _NATIVE:              # bf16 etc: not npz-native
+            arr = arr.astype(np.float32)          # load casts back via `like`
+        flat[key] = arr
+    return flat
+
+
+def _treedef_paths(tree: PyTree) -> list[str]:
+    return sorted(_flatten(tree).keys())
+
+
+def save_pytree(path: str, tree: PyTree, host_id: int = 0) -> None:
+    flat = _flatten(tree)
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, f"shard_{host_id}.npz"), **flat)
+
+
+def load_pytree(path: str, like: PyTree, host_id: int = 0) -> PyTree:
+    data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+    paths_and_leaves = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for p, leaf in paths_and_leaves:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "name", getattr(q, "idx", q)))) for q in p)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _write(self, tmp: str, final: str, flat: dict[str, np.ndarray],
+               manifest: dict) -> None:
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep_last)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, extra: dict | None = None) -> None:
+        self.wait()
+        # device->host copy happens here, synchronously
+        flat = _flatten(jax.device_get(tree))
+        manifest = {"step": int(step), "paths": sorted(flat.keys()),
+                    "extra": extra or {}}
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(tmp, final, flat, manifest), daemon=True)
+            self._thread.start()
+        else:
+            self._write(tmp, final, flat, manifest)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_", 1)[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: PyTree, step: int | None = None) -> tuple[int, PyTree, dict]:
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        tree = load_pytree(path, like)
+        return step, tree, manifest.get("extra", {})

@@ -1,0 +1,39 @@
+"""Architecture registry: the 10 assigned archs + the paper's CNN zoo.
+
+``get(arch_id)`` -> LMConfig; ``reduced(arch_id)`` -> smoke-test config.
+Shape cells for the dry-run live in ``shapes.py``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "chameleon-34b": "chameleon_34b",
+    "command-r-35b": "command_r_35b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen2.5-14b": "qwen25_14b",
+    "starcoder2-15b": "starcoder2_15b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-medium": "whisper_medium",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+CNN_ARCHS = ("vgg16", "resnet18", "resnet56", "mobilenet")
+
+
+def _mod(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f".{_ARCH_MODULES[arch]}", __package__)
+
+
+def get(arch: str):
+    return _mod(arch).CONFIG
+
+
+def reduced(arch: str):
+    return _mod(arch).reduced()

@@ -1,0 +1,43 @@
+"""The assigned input-shape cells (arch × shape grid; 40 cells).
+
+``long_500k`` needs sub-quadratic attention: it runs only for the
+SSM / hybrid / mostly-local archs and is SKIPPED for pure full-attention
+archs (see DESIGN.md §4 — 7 skips, noted in the roofline table).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose attention stack is sub-quadratic enough for 500k decode
+LONG_OK = ("gemma3-4b", "recurrentgemma-2b", "mamba2-2.7b")
+
+
+def cells(arch: str):
+    """All shape cells that run for `arch` (skips applied)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch not in LONG_OK:
+            continue
+        out.append(s)
+    return out
+
+
+def skipped(arch: str):
+    return [s for s in SHAPES.values()
+            if s.name == "long_500k" and arch not in LONG_OK]

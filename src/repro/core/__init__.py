@@ -1,0 +1,24 @@
+"""Zebra core — the paper's primary contribution (+ partner pruning methods)."""
+from .zebra import (  # noqa: F401
+    ZebraConfig,
+    init_threshold_net,
+    init_token_threshold_net,
+    zebra_cnn,
+    zebra_tokens,
+    zebra_infer_bitmap_nchw,
+    zebra_infer_bitmap_tokens,
+    collect_zebra_loss,
+    mean_zero_frac,
+)
+from .bandwidth import (  # noqa: F401
+    MapSpec,
+    TokenMapSpec,
+    stored_bits,
+    reduced_bandwidth_pct,
+    index_overhead_pct,
+    required_bandwidth_bytes,
+    conv_flops,
+    zebra_overhead_flops,
+    overhead_ratio,
+)
+from . import slimming, weight_pruning  # noqa: F401

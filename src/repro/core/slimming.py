@@ -1,0 +1,74 @@
+"""Network Slimming (Liu et al., ICCV'17) — the structured-pruning partner
+method the paper composes Zebra with (Tables II-IV).
+
+Procedure (faithful):
+ 1. *Sparsity training*: add L1 penalty ``rho * Σ|γ|`` on every BatchNorm
+    scale γ to the loss.
+ 2. *Slim*: rank all γ globally by magnitude, zero the channels whose γ
+    falls in the bottom ``prune_frac`` percentile (per-layer channel masks).
+ 3. *Retrain* with the masks fixed (here: together with Zebra).
+
+We prune by masking (γ, β and the channel's outgoing activation) rather
+than physically re-shaping weights — computationally identical for
+accuracy, keeps residual shapes intact, and the bandwidth accounting
+counts masked channels as removed maps (their blocks are all-zero).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import PyTree
+
+
+def gamma_l1(params: PyTree) -> jax.Array:
+    """Σ |γ| over every BatchNorm in the tree (keys named 'scale' under 'bn*')."""
+    total = jnp.float32(0.0)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(str(n).startswith("bn") for n in names) and str(names[-1]) == "scale":
+            total = total + jnp.sum(jnp.abs(leaf.astype(jnp.float32)))
+    return total
+
+
+def collect_gammas(params: PyTree) -> list[tuple[tuple, jax.Array]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if any(n.startswith("bn") for n in names) and names[-1] == "scale":
+            out.append((tuple(names), leaf))
+    return out
+
+
+def global_threshold(params: PyTree, prune_frac: float) -> float:
+    """Magnitude cut so that `prune_frac` of all BN channels fall below it."""
+    gammas = collect_gammas(params)
+    if not gammas:
+        return 0.0
+    allg = jnp.concatenate([jnp.abs(g.reshape(-1)) for _, g in gammas])
+    return float(jnp.quantile(allg.astype(jnp.float32), prune_frac))
+
+
+def channel_masks(params: PyTree, prune_frac: float) -> dict[tuple, jax.Array]:
+    """path-names -> keep mask (1.0 keep / 0.0 prune) per BN scale tensor."""
+    thr = global_threshold(params, prune_frac)
+    return {names: (jnp.abs(g) > thr).astype(jnp.float32)
+            for names, g in collect_gammas(params)}
+
+
+def apply_masks(params: PyTree, masks: dict[tuple, jax.Array]) -> PyTree:
+    """Multiply γ and β of pruned channels by 0 (channel output ≡ BN bias 0)."""
+    def fix(path, leaf):
+        names = tuple(str(getattr(p, "key", getattr(p, "name", ""))) for p in path)
+        if names in masks:
+            return leaf * masks[names].astype(leaf.dtype)
+        if names[:-1] + ("scale",) in masks and names[-1] == "bias":
+            return leaf * masks[names[:-1] + ("scale",)].astype(leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def pruned_channel_frac(masks: dict[tuple, jax.Array]) -> float:
+    tot = sum(int(m.size) for m in masks.values())
+    kept = sum(float(jnp.sum(m)) for m in masks.values())
+    return 1.0 - kept / max(tot, 1)

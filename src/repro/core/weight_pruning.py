@@ -1,0 +1,53 @@
+"""Magnitude weight pruning (Han et al., NeurIPS'15) — the unstructured
+partner method in Tables II-IV. Prune the smallest-|w| fraction of every
+conv / dense weight of a well-trained model, then retrain with the mask
+fixed (paper §III.A: "do weight pruning on a well-trained model and use
+the remaining weights to train with our method").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import PyTree
+
+
+def _is_weight(path, leaf) -> bool:
+    name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+    return name in ("w", "kernel") and leaf.ndim >= 2
+
+
+def magnitude_masks(params: PyTree, prune_frac: float, per_layer: bool = True) -> PyTree:
+    """0/1 keep-masks, same tree structure as params (None for non-weights)."""
+    if per_layer:
+        def mk(path, leaf):
+            if not _is_weight(path, leaf):
+                return None
+            thr = jnp.quantile(jnp.abs(leaf.astype(jnp.float32)), prune_frac)
+            return (jnp.abs(leaf) > thr).astype(leaf.dtype)
+        return jax.tree_util.tree_map_with_path(mk, params)
+    # global threshold across all weights
+    mags = [jnp.abs(l.reshape(-1).astype(jnp.float32))
+            for p, l in jax.tree_util.tree_leaves_with_path(params) if _is_weight(p, l)]
+    thr = jnp.quantile(jnp.concatenate(mags), prune_frac)
+
+    def mk(path, leaf):
+        if not _is_weight(path, leaf):
+            return None
+        return (jnp.abs(leaf) > thr).astype(leaf.dtype)
+    return jax.tree_util.tree_map_with_path(mk, params)
+
+
+def apply_masks(params: PyTree, masks: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, m: p if m is None else p * m, params, masks,
+        is_leaf=lambda x: x is None)
+
+
+def sparsity(masks: PyTree) -> float:
+    tot = kept = 0
+    for m in jax.tree_util.tree_leaves(masks):
+        if m is not None:
+            tot += int(m.size)
+            kept += float(jnp.sum(m))
+    return 1.0 - kept / max(tot, 1)

@@ -1,0 +1,222 @@
+"""Zebra — Zero-Block Regularization of activation maps (Shih & Chang, ISCAS'20).
+
+The paper's contribution, as a composable JAX module.
+
+Two activation layouts are supported:
+
+* **CNN maps** ``(B, C, H, W)`` — faithful reproduction: non-overlapping
+  spatial ``b×b`` blocks per channel, block importance = block max, one
+  threshold per (layer, channel) produced by a GAP+FC threshold network
+  (training) or the constant ``T_obj`` (inference). Paper §II.A/§II.B.
+* **Token maps** ``(B, S, D)`` — the TPU adaptation (DESIGN.md §2): blocks
+  are ``(block_seq × block_ch)`` tiles, shaped like VMEM tiles so that a
+  zero block is a skippable HBM transfer. Importance uses ``max(|x|)``
+  because RMSNorm'd activations are unbounded/signed (post-ReLU maps are
+  non-negative, where ``max(|x|) == max(x)`` — so the CNN path stays
+  faithful).
+
+Training-mode gradient semantics (paper-faithful default ``grad_mode=
+"hard"``): the mask is a hard 0/1 gate under ``stop_gradient``; thresholds
+receive gradient *only* from the L2 regularizer pulling them to ``T_obj``
+(Eq. 1), surviving blocks receive the task gradient. ``"ste"`` and
+``"soft"`` are beyond-paper trainability variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Aux = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ZebraConfig:
+    enabled: bool = True
+    t_obj: float = 0.1           # target threshold T_obj (Eq. 1), in [0, 1]
+    block_hw: int = 4            # spatial b for CNN maps (paper: 4 / 8 / 2)
+    block_seq: int = 8           # token-block rows for LM maps (VMEM sublane)
+    block_ch: int = 128          # channel-block cols for LM maps (VMEM lane)
+    lambda_ce: float = 1.0       # λ weighting the CE term in Eq. 1
+    mode: str = "train"          # "train" (threshold net) | "infer" (T_obj)
+    grad_mode: str = "hard"      # "hard" (paper) | "ste" | "soft"
+    soft_temp: float = 0.05
+    act_bits: int = 16           # B in Eq. 2 (bf16 activations on TPU)
+
+    def replace(self, **kw) -> "ZebraConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Threshold network: T_{l,c} = FC(GAP(x))  (paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+def init_threshold_net(key: jax.Array, channels: int, dtype=jnp.float32) -> dict:
+    """One per Zebra site. FC maps GAP features -> per-channel thresholds."""
+    w = jax.random.normal(key, (channels, channels), dtype) * (channels ** -0.5)
+    b = jnp.zeros((channels,), dtype)
+    return {"w": w, "b": b}
+
+
+def _thresholds_from_net(tnet: dict, gap: jax.Array) -> jax.Array:
+    """gap: (B, C) -> per-sample, per-channel thresholds (B, C)."""
+    return gap @ tnet["w"] + tnet["b"]
+
+
+def init_token_threshold_net(key: jax.Array, d: int, n_ch_blocks: int,
+                             dtype=jnp.float32) -> dict:
+    """LM variant (DESIGN.md §2): the FC emits one threshold per *channel
+    block* (d_ff can be 22k wide — a C×C FC would be 0.5B params/layer)."""
+    w = jax.random.normal(key, (d, n_ch_blocks), dtype) * (d ** -0.5)
+    b = jnp.zeros((n_ch_blocks,), dtype)
+    return {"w": w, "b": b}
+
+
+# ---------------------------------------------------------------------------
+# Block partition + masking
+# ---------------------------------------------------------------------------
+
+def _block_reduce_max_nchw(x: jax.Array, b: int) -> jax.Array:
+    """(B,C,H,W) -> per-block max (B,C,H//b,W//b). H,W must divide by b."""
+    B, C, H, W = x.shape
+    xb = x.reshape(B, C, H // b, b, W // b, b)
+    return jnp.max(jnp.abs(xb), axis=(3, 5))
+
+
+def _block_reduce_max_bsd(x: jax.Array, bs: int, bc: int) -> jax.Array:
+    """(B,S,D) -> per-block max (B,S//bs,D//bc)."""
+    B, S, D = x.shape
+    xb = x.reshape(B, S // bs, bs, D // bc, bc)
+    return jnp.max(jnp.abs(xb), axis=(2, 4))
+
+
+def _expand_mask_nchw(mask_blocks: jax.Array, b: int) -> jax.Array:
+    m = jnp.repeat(mask_blocks, b, axis=2)
+    return jnp.repeat(m, b, axis=3)
+
+
+def _expand_mask_bsd(mask_blocks: jax.Array, bs: int, bc: int) -> jax.Array:
+    m = jnp.repeat(mask_blocks, bs, axis=1)
+    return jnp.repeat(m, bc, axis=2)
+
+
+def _apply_gate(x: jax.Array, keep: jax.Array, blockmax: jax.Array,
+                thr: jax.Array, cfg: ZebraConfig, expand) -> jax.Array:
+    """Gate x by the block keep-mask under the configured gradient mode."""
+    if cfg.grad_mode == "soft" and cfg.mode == "train":
+        gate = jax.nn.sigmoid((blockmax - thr) / cfg.soft_temp)
+        return x * expand(gate).astype(x.dtype)
+    mask = expand(jax.lax.stop_gradient(keep)).astype(x.dtype)
+    y = x * mask
+    if cfg.grad_mode == "ste" and cfg.mode == "train":
+        # value: masked; gradient wrt x: identity (lets pruned blocks recover)
+        y = y + (x - jax.lax.stop_gradient(x)) * (1.0 - mask)
+    return y
+
+
+def _reg_loss(thr: jax.Array, t_obj: float) -> jax.Array:
+    """Σ_c ||T_obj − T_c||², averaged over the batch dim (Eq. 1 second term)."""
+    per_sample = jnp.sum(jnp.square(t_obj - thr.astype(jnp.float32)), axis=-1)
+    return jnp.mean(per_sample)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def zebra_cnn(x: jax.Array, cfg: ZebraConfig, tnet: dict | None = None) -> tuple[jax.Array, Aux]:
+    """Zebra over a (B, C, H, W) activation map. Returns (masked x, aux).
+
+    aux: reg (scalar), zero_frac (scalar in [0,1]), n_blocks, thresholds.
+    """
+    if not cfg.enabled:
+        return x, {"reg": jnp.float32(0.0), "zero_frac": jnp.float32(0.0),
+                   "n_blocks": 0, "thresholds": None}
+    B, C, H, W = x.shape
+    b = cfg.block_hw
+    if H % b or W % b:
+        raise ValueError(f"map {H}x{W} not divisible by block {b}")
+    blockmax = _block_reduce_max_nchw(x, b)                       # (B,C,Hb,Wb)
+    if cfg.mode == "train":
+        if tnet is None:
+            raise ValueError("train mode needs threshold-net params")
+        gap = jnp.mean(x, axis=(2, 3)).astype(jnp.float32)        # (B,C) GAP
+        thr = _thresholds_from_net(tnet, gap)                     # (B,C)
+        reg = _reg_loss(thr, cfg.t_obj)
+        thr_b = thr[:, :, None, None].astype(blockmax.dtype)
+    else:
+        thr = jnp.full((C,), cfg.t_obj, jnp.float32)              # Fig. 3
+        reg = jnp.float32(0.0)
+        thr_b = thr[None, :, None, None].astype(blockmax.dtype)
+    keep = (blockmax >= thr_b)
+    y = _apply_gate(x, keep, blockmax, thr_b, cfg, lambda m: _expand_mask_nchw(m, b))
+    zero_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    n_blocks = C * (H // b) * (W // b)
+    return y, {"reg": reg, "zero_frac": zero_frac, "n_blocks": n_blocks,
+               "thresholds": thr}
+
+
+def zebra_tokens(x: jax.Array, cfg: ZebraConfig, tnet: dict | None = None) -> tuple[jax.Array, Aux]:
+    """Zebra over a (B, S, D) token activation map (TPU tile blocks)."""
+    if not cfg.enabled:
+        return x, {"reg": jnp.float32(0.0), "zero_frac": jnp.float32(0.0),
+                   "n_blocks": 0, "thresholds": None}
+    B, S, D = x.shape
+    bs, bc = cfg.block_seq, cfg.block_ch
+    if S % bs or D % bc:
+        raise ValueError(f"(S={S}, D={D}) not divisible by block ({bs},{bc})")
+    blockmax = _block_reduce_max_bsd(x, bs, bc)                   # (B,Sb,Db)
+    if cfg.mode == "train":
+        if tnet is None:
+            raise ValueError("train mode needs threshold-net params")
+        gap = jnp.mean(jnp.abs(x), axis=1).astype(jnp.float32)    # (B,D) GAP
+        thr_ch = _thresholds_from_net(tnet, gap)                  # (B,Db)
+        reg = _reg_loss(thr_ch, cfg.t_obj)
+        thr_b = thr_ch[:, None, :].astype(blockmax.dtype)         # (B,1,Db)
+    else:
+        reg = jnp.float32(0.0)
+        thr_b = jnp.asarray(cfg.t_obj, blockmax.dtype)
+        thr_ch = None
+    keep = (blockmax >= thr_b)
+    y = _apply_gate(x, keep, blockmax, thr_b, cfg,
+                    lambda m: _expand_mask_bsd(m, bs, bc))
+    zero_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    n_blocks = (S // bs) * (D // bc)
+    return y, {"reg": reg, "zero_frac": zero_frac, "n_blocks": n_blocks,
+               "thresholds": thr_ch}
+
+
+def zebra_infer_bitmap_nchw(x: jax.Array, cfg: ZebraConfig) -> tuple[jax.Array, jax.Array]:
+    """Inference helper: (masked x, keep-bitmap) for hardware-style storage."""
+    b = cfg.block_hw
+    blockmax = _block_reduce_max_nchw(x, b)
+    keep = blockmax >= jnp.asarray(cfg.t_obj, blockmax.dtype)
+    y = x * _expand_mask_nchw(keep, b).astype(x.dtype)
+    return y, keep
+
+
+def zebra_infer_bitmap_tokens(x: jax.Array, cfg: ZebraConfig) -> tuple[jax.Array, jax.Array]:
+    bs, bc = cfg.block_seq, cfg.block_ch
+    blockmax = _block_reduce_max_bsd(x, bs, bc)
+    keep = blockmax >= jnp.asarray(cfg.t_obj, blockmax.dtype)
+    y = x * _expand_mask_bsd(keep, bs, bc).astype(x.dtype)
+    return y, keep
+
+
+def collect_zebra_loss(auxes: list[Aux]) -> jax.Array:
+    """Σ_{l} reg_l — the second term of Eq. 1 across all Zebra sites."""
+    regs = [a["reg"] for a in auxes if a.get("reg") is not None]
+    return jnp.sum(jnp.stack(regs)) if regs else jnp.float32(0.0)
+
+
+def mean_zero_frac(auxes: list[Aux]) -> jax.Array:
+    """Block-count-weighted mean zero-block fraction across sites."""
+    num, den = jnp.float32(0.0), 0.0
+    for a in auxes:
+        nb = float(a.get("n_blocks", 0) or 0)
+        if nb:
+            num = num + a["zero_frac"] * nb
+            den += nb
+    return num / den if den else jnp.float32(0.0)

@@ -1,0 +1,9 @@
+from .synthetic import (  # noqa: F401
+    SYN_CIFAR10,
+    SYN_TINYIMAGENET,
+    ImageDatasetConfig,
+    LMDatasetConfig,
+    StreamingLoader,
+    image_batch,
+    lm_batch,
+)

@@ -1,0 +1,110 @@
+"""Procedural datasets (offline container — DESIGN.md §6).
+
+Image stream: class-conditional oriented-stripe/blob textures composited on
+low-amplitude background clutter. Properties we need for the reproduction:
+  * learnable (a small CNN reaches high accuracy, degrades when over-pruned)
+  * real "background" pixels so Zebra's zero-block story is testable
+  * deterministic per (seed, step) — the pipeline is a counter-indexed PRNG
+    stream, so a restarted job replays no sample (fault-tolerance §5).
+
+LM stream: noisy affine-recurrence token sequences (x_{t+1} = a*x_t + b + ε
+mod V_eff embedded in the full vocab) — enough structure for loss to fall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageDatasetConfig:
+    name: str = "syn-cifar10"     # or "syn-tinyimagenet"
+    num_classes: int = 10
+    hw: int = 32
+    seed: int = 0
+    noise: float = 0.15           # background clutter amplitude
+    fg_classes_per_image: int = 1
+
+
+SYN_CIFAR10 = ImageDatasetConfig("syn-cifar10", 10, 32)
+SYN_TINYIMAGENET = ImageDatasetConfig("syn-tinyimagenet", 200, 64)
+
+
+def _class_texture(cls: int, num_classes: int, hw: int, rng: np.random.Generator):
+    """Oriented stripe patch whose (angle, frequency, phase-color) encode cls."""
+    angle = np.pi * (cls % num_classes) / num_classes
+    freq = 2.0 + 3.0 * ((cls * 7) % 5)
+    yy, xx = np.meshgrid(np.linspace(-1, 1, hw), np.linspace(-1, 1, hw), indexing="ij")
+    u = np.cos(angle) * xx + np.sin(angle) * yy
+    base = np.sin(2 * np.pi * freq * u + rng.uniform(0, 2 * np.pi))
+    color = np.array([np.sin(cls), np.cos(2 * cls), np.sin(3 * cls + 1)]) * 0.5 + 0.75
+    return base[None, :, :] * color[:, None, None]          # (3, hw, hw)
+
+
+def image_batch(cfg: ImageDatasetConfig, batch: int, step: int):
+    """-> (images (B,3,H,W) float32 ~N(0,1)-ish, labels (B,) int32)."""
+    rng = np.random.default_rng((cfg.seed << 32) ^ (step & 0xFFFFFFFF))
+    hw = cfg.hw
+    labels = rng.integers(0, cfg.num_classes, size=(batch,))
+    imgs = rng.normal(0.0, cfg.noise, size=(batch, 3, hw, hw)).astype(np.float32)
+    for i in range(batch):
+        tex = _class_texture(int(labels[i]), cfg.num_classes, hw, rng)
+        # place the foreground patch over a random sub-window; the rest stays
+        # background clutter => spatially sparse information, like photos.
+        ph = rng.integers(hw // 2, hw + 1)
+        pw = rng.integers(hw // 2, hw + 1)
+        top = rng.integers(0, hw - ph + 1)
+        left = rng.integers(0, hw - pw + 1)
+        imgs[i, :, top:top + ph, left:left + pw] += tex[:, :ph, :pw].astype(np.float32)
+    return imgs, labels.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDatasetConfig:
+    vocab: int = 32000
+    effective_vocab: int = 509    # prime < vocab: structure lives here
+    seed: int = 0
+    noise_p: float = 0.05
+
+
+def lm_batch(cfg: LMDatasetConfig, batch: int, seq: int, step: int):
+    """-> (tokens (B, S+1) int32); inputs = [:, :-1], labels = [:, 1:]."""
+    rng = np.random.default_rng((cfg.seed << 32) ^ (0x5BCD ^ step))
+    V = cfg.effective_vocab
+    a = 5 + 2 * rng.integers(0, 20, size=(batch, 1))
+    b = rng.integers(0, V, size=(batch, 1))
+    x = np.empty((batch, seq + 1), dtype=np.int64)
+    x[:, 0] = rng.integers(0, V, size=batch)
+    for t in range(seq):
+        nxt = (a[:, 0] * x[:, t] + b[:, 0]) % V
+        flip = rng.random(batch) < cfg.noise_p
+        nxt = np.where(flip, rng.integers(0, V, size=batch), nxt)
+        x[:, t + 1] = nxt
+    return (x % cfg.vocab).astype(np.int32)
+
+
+class StreamingLoader:
+    """Counter-indexed loader: `state` is just the step counter, so
+    checkpoint/restore = persist an int. Shards the global batch by host."""
+
+    def __init__(self, make_fn, global_batch: int, host_id: int = 0, n_hosts: int = 1,
+                 start_step: int = 0):
+        assert global_batch % n_hosts == 0
+        self.make_fn = make_fn
+        self.local_batch = global_batch // n_hosts
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.step = start_step
+
+    def __next__(self):
+        # fold host_id into the counter stream so hosts draw disjoint data
+        out = self.make_fn(self.local_batch, self.step * self.n_hosts + self.host_id)
+        self.step += 1
+        return out
+
+    def state(self) -> int:
+        return self.step
+
+    def restore(self, step: int) -> None:
+        self.step = step

@@ -1,0 +1,2 @@
+from . import sharding  # noqa: F401
+from .ctx import sharding_hints, hint, dp_axes  # noqa: F401

@@ -1,0 +1,86 @@
+"""Sharding-hint context: lets model code drop `with_sharding_constraint`
+hints (e.g. the MoE dispatch buffer must stay expert-sharded) without
+threading a mesh through every call signature. No-op outside a context."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+_DP = contextvars.ContextVar("repro_dp_axes", default=None)
+_TP = contextvars.ContextVar("repro_tp_axis", default="model")
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh, dp: tuple | None = None, tp: str | None = "model"):
+    """dp: axes carrying the batch (default: pod+data). tp: the tensor-
+    parallel axis referenced by trailing hints, or None for pure-DP."""
+    tok = _MESH.set(mesh)
+    tok2 = _DP.set(dp)
+    tok3 = _TP.set(tp)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+        _DP.reset(tok2)
+        _TP.reset(tok3)
+
+
+def hint(x, *spec):
+    """Apply a PartitionSpec constraint if a mesh context is active and the
+    spec is valid for this mesh (unknown axes and axes that don't divide
+    the dimension degrade to None)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def clean(s, dim):
+        if s is None:
+            return None
+        axes = tuple(a for a in (s if isinstance(s, (tuple, list)) else (s,))
+                     if a in names)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim % size == 0:
+                break
+            axes = axes[1:]
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    spec = tuple(clean(s, d) for s, d in zip(spec, x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def dp_axes():
+    override = _DP.get()
+    if override is not None:
+        return override
+    mesh = _MESH.get()
+    if mesh is None:
+        return ("data",)
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def tp_axis():
+    """Active tensor-parallel axis name, or None under the pure-DP profile."""
+    return _TP.get()
+
+
+def hint_tokens(x, *trailing):
+    """Batch-sharded activation constraint: dim0 over the DP axes, given
+    trailing spec for the last len(trailing) dims, None between. A
+    trailing "model" resolves to the active TP axis (None in pure-DP)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    tp = _TP.get()
+    trailing = tuple(tp if t == "model" else t for t in trailing)
+    mid = (None,) * (x.ndim - 1 - len(trailing))
+    return hint(x, dp_axes(), *mid, *trailing)

@@ -1,0 +1,192 @@
+"""Sharding rules: param-tree path names -> PartitionSpec.
+
+Conventions (DESIGN.md §5):
+  * "data"  — batch + FSDP (ZeRO-3) parameter sharding
+  * "model" — TP (attention heads, d_ff), EP (experts), vocab, KV-seq
+  * "pod"   — pure DP only (cross-pod = one gradient all-reduce)
+
+Rules are keyed on leaf *names* (with parent-context checks) and applied to
+the trailing dims, so run-stacked leaves (leading superlayer axis) get a
+None prepended automatically. Optimizer/compression state mirrors params
+because the same rules fire on the mirrored subtrees.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.lm.config import LMConfig
+
+
+def _kv_axis(cfg: LMConfig, mesh: Mesh):
+    m = mesh.shape.get("model", 1)
+    return "model" if (cfg.n_kv_heads and cfg.n_kv_heads % m == 0) else None
+
+
+def _axis_ok(shape, template, mesh):
+    """Drop axis names whose mesh size doesn't divide the dim."""
+    out = []
+    for dim, ax in zip(shape[-len(template):], template):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+def spec_for(path_names: tuple[str, ...], shape: tuple[int, ...],
+             cfg: LMConfig, mesh: Mesh) -> P:
+    n = path_names
+    name = n[-1]
+    kv = _kv_axis(cfg, mesh)
+    pure_dp = getattr(cfg, "sharding_profile", "tp") == "dp"
+
+    def t(*template):
+        if pure_dp:   # pure data parallel: no TP/EP — "model" carries batch
+            template = tuple(None if a == "model" else a for a in template)
+        template = _axis_ok(shape, template, mesh)
+        return P(*((None,) * (len(shape) - len(template)) + template))
+
+    # --- embeddings / head ---
+    if name == "embed":
+        return t("model", None)
+    if name == "lm_head":
+        return t(None, "model")
+    # --- zebra threshold nets ---
+    if "zebra_tnet" in n or "zebra_out_tnet" in n:
+        return t("model", None) if name == "w" else t(None)
+    # --- norms ---
+    if name in ("scale", "bias") and len(n) >= 2 and n[-2] == "out_norm":
+        return t("model")
+    if name in ("scale", "bias"):
+        return t(None)
+    # --- attention ---
+    if name == "wq":
+        return t("data", "model", None)
+    if name in ("wk", "wv"):
+        return t("data", kv, None)
+    if name == "wo":
+        return t("model", None, "data")
+    if name == "bq":
+        return t("model", None)
+    if name in ("bk", "bv"):
+        return t(kv, None)
+    # --- FFN dense vs MoE (by ndim: MoE weights carry a leading E) ---
+    if name in ("w_gate", "w_up"):
+        if "moe" in n:
+            return t("model", "data", None)
+        return t("data", "model")
+    if name == "w_down":
+        if "moe" in n:
+            return t("model", None, "data")
+        return t("model", "data")
+    if name in ("b_up",):
+        return t("model")
+    if name in ("b_down",):
+        return t(None)
+    if name == "router":
+        return t("data", None)
+    # --- Mamba-2 ---
+    if name in ("z_proj", "x_proj", "dt_proj"):
+        return t("data", "model")
+    if name in ("b_proj", "c_proj"):
+        return t("data", None)
+    if name == "conv_x":
+        return t(None, "model")
+    if name in ("conv_b", "conv_c"):
+        return t(None, None)
+    if name in ("A_log", "D", "dt_bias"):
+        return t("model")
+    if name == "out_proj":
+        return t("model", "data")
+    # --- RG-LRU ---
+    if name in ("w_gate_branch", "w_rec_branch"):
+        return t("data", "model")
+    if name in ("w_a", "w_x"):
+        return t(None, "model")
+    if name in ("b_a", "b_x", "lam"):
+        return t("model")
+    if name == "w_out":
+        return t("model", "data")
+    if name == "conv_w":
+        return t(None, "model")
+    return P()   # replicate anything unknown
+
+
+def _names(path) -> tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                 for p in path)
+
+
+def param_specs(tree, cfg: LMConfig, mesh: Mesh):
+    """PartitionSpec pytree matching `tree` (params / grads / opt state)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_names(path), leaf.shape, cfg, mesh), tree)
+
+
+def param_shardings(tree, cfg: LMConfig, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(tree, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def dp(mesh, cfg: LMConfig | None = None) -> tuple[str, ...]:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if cfg is not None and getattr(cfg, "sharding_profile", "tp") == "dp":
+        axes = axes + ("model",)     # pure DP: batch over every axis
+    return axes
+
+
+def batch_spec(mesh, ndim: int, batch: int | None = None,
+               cfg: LMConfig | None = None) -> P:
+    """Shard dim0 (global batch) over the DP axes, replicate the rest.
+    Axes that don't divide `batch` are dropped (e.g. long_500k batch=1)."""
+    axes = dp(mesh, cfg)
+    if batch is not None:
+        while axes and batch % int(np.prod([mesh.shape[a] for a in axes])):
+            axes = axes[1:]     # drop the outermost (pod) axis first
+    return P(axes if axes else None, *([None] * (ndim - 1)))
+
+
+def cache_spec_for(path_names, shape, cfg: LMConfig, mesh: Mesh) -> P:
+    name = path_names[-1]
+    kv = _kv_axis(cfg, mesh)
+    pure_dp = getattr(cfg, "sharding_profile", "tp") == "dp"
+
+    def t(*template):
+        if pure_dp:
+            template = tuple(None if a == "model" else a for a in template)
+        template = _axis_ok(shape, template, mesh)
+        return P(*((None,) * (len(shape) - len(template)) + template))
+
+    d = dp(mesh, cfg)
+    if name in ("k", "v"):            # (B, T, Hkv, hd): split-K over seq
+        return t(d, "model", None, None)
+    if name == "H":                   # (B, nh, ds, hd)
+        return t(d, "model", None, None)
+    if name == "conv_x":              # (B, w, di)
+        return t(d, None, "model")
+    if name in ("conv_b", "conv_c"):
+        return t(d, None, None)
+    if name == "h":                   # (B, dl)
+        return t(d, "model")
+    if name == "conv":                # rglru ring (B, w, dl)
+        return t(d, None, "model")
+    return P()
+
+
+def cache_specs(cache_tree, cfg: LMConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec_for(_names(path), leaf.shape, cfg, mesh),
+        cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from .supervisor import FTConfig, StepSupervisor, remesh_state  # noqa: F401

@@ -1,0 +1,137 @@
+"""Fault-tolerance supervisor (DESIGN.md §5).
+
+Wraps a step loop with:
+  * periodic checkpointing (async, atomic) + auto-resume,
+  * heartbeat file (external watchdogs / co-hosts read it),
+  * straggler detection — step-time z-score over a trailing window; on a
+    real multi-host job the same detector runs on the per-host heartbeat
+    matrix and the slowest host is evicted / re-sharded around,
+  * elastic re-mesh — on device-count change (simulated or real restart),
+    the mesh is rebuilt from the live device count and the state is
+    re-sharded via device_put with re-derived NamedShardings.
+
+The supervisor is deliberately host-side, framework-agnostic code: the
+same loop drives the CPU demo here and a real TPU slice (jax.distributed
+initializes per-host; the heartbeat file becomes a shared-store key).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_last: int = 3
+    heartbeat_path: str = ""           # default: <ckpt_dir>/heartbeat.json
+    straggler_window: int = 20
+    straggler_zscore: float = 4.0
+    max_failures: int = 3
+
+
+class StepSupervisor:
+    def __init__(self, cfg: FTConfig):
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_last)
+        self.hb_path = cfg.heartbeat_path or os.path.join(cfg.ckpt_dir, "heartbeat.json")
+        self.times: deque[float] = deque(maxlen=cfg.straggler_window)
+        self.straggler_events: list[dict] = []
+        self.failures = 0
+
+    # ------------------------------------------------------------------
+    def resume_or_init(self, init_fn: Callable[[], Any], like: Any | None = None):
+        """Restore the newest valid checkpoint, else initialize fresh."""
+        if self.ckpt.latest_step() is not None:
+            like = like if like is not None else init_fn()
+            step, state, extra = self.ckpt.restore(like)
+            return state, step, extra
+        return init_fn(), 0, {}
+
+    # ------------------------------------------------------------------
+    def heartbeat(self, step: int, metrics: dict | None = None) -> None:
+        tmp = self.hb_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": int(step), "time": time.time(),
+                       "host": jax.process_index(),
+                       "metrics": {k: float(v) for k, v in (metrics or {}).items()}}, f)
+        os.replace(tmp, self.hb_path)
+
+    def check_straggler(self, dt: float) -> bool:
+        """True if this step is a straggler vs the trailing window."""
+        if len(self.times) >= self.cfg.straggler_window // 2:
+            mu = float(np.mean(self.times))
+            sd = float(np.std(self.times)) + 1e-9
+            if (dt - mu) / sd > self.cfg.straggler_zscore and dt > 1.5 * mu:
+                self.straggler_events.append(
+                    {"dt": dt, "mean": mu, "std": sd, "time": time.time()})
+                return True
+        self.times.append(dt)
+        return False
+
+    # ------------------------------------------------------------------
+    def run(self, state, step_fn: Callable, data_iter, steps: int,
+            start_step: int = 0, loader_state_fn=None,
+            on_metrics: Callable | None = None):
+        """The supervised loop: step -> heartbeat -> (ckpt) -> straggler
+        check. Exceptions restore the last checkpoint (up to max_failures)."""
+        step = start_step
+        while step < steps:
+            batch = next(data_iter)
+            t0 = time.time()
+            try:
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            except Exception:  # noqa: BLE001 — node-failure path
+                self.failures += 1
+                if self.failures > self.cfg.max_failures or self.ckpt.latest_step() is None:
+                    raise
+                step, state, extra = self.ckpt.restore(state)
+                if loader_state_fn:
+                    data_iter.restore(extra.get("loader_step", step))
+                continue
+            dt = time.time() - t0
+            step += 1
+            self.check_straggler(dt)
+            if step % 10 == 0 or step == steps:
+                self.heartbeat(step, metrics)
+            if on_metrics:
+                on_metrics(step, {k: float(v) for k, v in metrics.items()})
+            if step % self.cfg.ckpt_every == 0 or step == steps:
+                extra = {"loader_step": (loader_state_fn() if loader_state_fn
+                                         else step)}
+                self.ckpt.save(step, state, extra)
+        self.ckpt.wait()
+        return state, step
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-mesh
+# ---------------------------------------------------------------------------
+
+def remesh_state(state, cfg, old_mesh, spec_fn) -> tuple[Any, Any]:
+    """Rebuild the mesh from the LIVE device count and re-shard `state`.
+
+    `spec_fn(state, cfg, mesh)` re-derives the PartitionSpec tree — rules
+    are axis-NAME based, so any new (data, model) factorization works.
+    Returns (new_state, new_mesh)."""
+    from ..launch.mesh import make_host_mesh
+    model = old_mesh.shape.get("model", 1)
+    n = len(jax.devices())
+    while model > 1 and (n % model or model > n):
+        model //= 2
+    new_mesh = make_host_mesh(model=model)
+    from ..distributed.sharding import to_shardings
+    shardings = to_shardings(spec_fn(state, cfg, new_mesh), new_mesh)
+    new_state = jax.device_put(state, shardings)
+    return new_state, new_mesh

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the Zebra
+comparator (zebra_mask) and the block-skipping GEMM (zebra_spmm)."""
+from .ops import zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python for correctness); on TPU pass
+``interpret=False``. ``zebra_ffn_hidden`` is the fused "Zebra site +
+downstream matmul" used by the LM stack when ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .zebra_mask import zebra_mask
+from .zebra_spmm import zebra_spmm
+from . import ref
+
+
+def zebra_mask_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
+                  interpret: bool = True):
+    """(..., M, K) tolerant wrapper; flattens leading dims onto M."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y, bm = zebra_mask(x2, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
+    return y.reshape(shape), bm
+
+
+def zebra_spmm_op(x: jax.Array, w: jax.Array, bitmap: jax.Array,
+                  bs: int = 8, bc: int = 128, interpret: bool = True):
+    return zebra_spmm(x, w, bitmap, bs=bs, bc=bc, interpret=interpret)
+
+
+def zebra_ffn_hidden(x: jax.Array, w_out: jax.Array, t_obj: float,
+                     bs: int = 8, bc: int = 128, interpret: bool = True):
+    """Fused: h' = zebra(h); y = h' @ W_out, skipping dead blocks."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    h, bm = zebra_mask(x2, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
+    y = zebra_spmm(h, w_out, bm, bs=bs, bc=bc, interpret=interpret)
+    return y.reshape(*shape[:-1], w_out.shape[-1]), bm

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Layout convention: activations are 2-D ``(M, K)`` token maps (batch·seq
+flattened onto M, channels on K). Zebra blocks are ``(bs, bc)`` tiles;
+bitmap[i, j] == keep for block (i, j).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zebra_mask_ref(x: jax.Array, t_obj: float, bs: int, bc: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Inference-mode Zebra: zero every (bs, bc) block whose max|x| < t_obj.
+
+    Returns (masked x, keep bitmap (M//bs, K//bc) int8).
+    """
+    M, K = x.shape
+    xb = x.reshape(M // bs, bs, K // bc, bc)
+    blockmax = jnp.max(jnp.abs(xb), axis=(1, 3))                 # (Mb, Kb)
+    keep = blockmax >= jnp.asarray(t_obj, blockmax.dtype)
+    y = (xb * keep[:, None, :, None].astype(x.dtype)).reshape(M, K)
+    return y, keep.astype(jnp.int8)
+
+
+def zebra_spmm_ref(x: jax.Array, w: jax.Array, bitmap: jax.Array,
+                   bs: int, bc: int) -> jax.Array:
+    """Block-sparse activation x dense weight: y = (x ⊙ blockmask) @ w.
+
+    x: (M, K), w: (K, N), bitmap: (M//bs, K//bc) keep flags.
+    """
+    M, K = x.shape
+    mask = jnp.repeat(jnp.repeat(bitmap.astype(x.dtype), bs, 0), bc, 1)
+    return ((x * mask).astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+def zebra_mask_then_spmm_ref(x, w, t_obj, bs, bc):
+    y, bm = zebra_mask_ref(x, t_obj, bs, bc)
+    return y.astype(jnp.float32) @ w.astype(jnp.float32), bm

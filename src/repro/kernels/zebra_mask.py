@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused Zebra comparator (paper Fig. 3, inference mode).
+
+One HBM pass: load a ``(TM, TK)`` activation tile into VMEM, compute the
+per-``(bs, bc)``-block max, compare against the threshold, zero dead blocks
+in-register, write the tile and its keep-bitmap back. This is the paper's
+RTL comparator recast as a VMEM-tiled epilogue (DESIGN.md §2/§7).
+
+Tiling: the kernel tile (TM, TK) contains an integer number of Zebra
+blocks; default TM=256, TK=512 with (bs, bc) = (8, 128) — i.e. 32x4 Zebra
+blocks per VMEM tile, MXU/VPU aligned (TK multiple of 128 lanes, TM
+multiple of 8 sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..utils import cdiv
+
+
+def _zebra_mask_kernel(x_ref, y_ref, bm_ref, *, t_obj: float, bs: int, bc: int):
+    x = x_ref[...]
+    TM, TK = x.shape
+    xb = x.reshape(TM // bs, bs, TK // bc, bc)
+    blockmax = jnp.max(jnp.abs(xb), axis=(1, 3))                  # (tm, tk)
+    keep = blockmax >= jnp.asarray(t_obj, blockmax.dtype)
+    y = xb * keep[:, None, :, None].astype(x.dtype)
+    y_ref[...] = y.reshape(TM, TK)
+    bm_ref[...] = keep.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("t_obj", "bs", "bc", "tm", "tk",
+                                             "interpret"))
+def zebra_mask(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
+               tm: int = 256, tk: int = 512, interpret: bool = True
+               ) -> tuple[jax.Array, jax.Array]:
+    """(M, K) -> (masked (M, K), keep bitmap (M//bs, K//bc) int8)."""
+    M, K = x.shape
+    tm = min(tm, M)
+    tk = min(tk, K)
+    if M % bs or K % bc:
+        raise ValueError(f"(M={M}, K={K}) must divide by block ({bs},{bc})")
+    if tm % bs or tk % bc:
+        raise ValueError(f"tile ({tm},{tk}) must divide by block ({bs},{bc})")
+    grid = (cdiv(M, tm), cdiv(K, tk))
+    kernel = functools.partial(_zebra_mask_kernel, t_obj=t_obj, bs=bs, bc=bc)
+    y, bm = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, tk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tm // bs, tk // bc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), x.dtype),
+            jax.ShapeDtypeStruct((M // bs, K // bc), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x)
+    return y, bm

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: block-sparse activation x dense weight GEMM that
+*skips* Zebra zero blocks — harvesting the bandwidth sparsity as MXU time
+(beyond-paper; the paper's ASIC gets the skip for free, DESIGN.md §7).
+
+    y[M, N] = (x ⊙ blockmask)[M, K] @ w[K, N]
+
+Grid (M/bm, N/bn, K/bk) with bm == bs (one Zebra block row per M-tile) and
+bk == bc (one Zebra block col per K-tile), K innermost so each (i, j)
+accumulates into a VMEM scratch accumulator in fp32.
+
+Skip machinery: the keep-bitmap rides in scalar-prefetch SMEM. Dead blocks
+(a) contribute nothing — `pl.when` guards the dot; and (b) cost no HBM
+traffic — the x-BlockSpec index_map replays the *previous live* K-index via
+a precomputed `kmap`, so the pruned tile is never fetched (revolving-door
+indexing, the standard Pallas block-sparse trick).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..utils import cdiv
+
+
+def _spmm_kernel(kmap_ref, keep_ref, x_ref, w_ref, y_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(0)
+    live = keep_ref[i * nk + k] != 0
+
+    @pl.when(live)
+    def _acc():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "interpret"))
+def zebra_spmm(x: jax.Array, w: jax.Array, bitmap: jax.Array, *,
+               bs: int = 8, bc: int = 128, bn: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """(M,K) x (K,N) with (M//bs, K//bc) keep-bitmap -> (M,N) fp32."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K2 == K and bitmap.shape == (M // bs, K // bc), (bitmap.shape, M, K)
+    bn = min(bn, N)
+    nm, nn, nk = M // bs, cdiv(N, bn), K // bc
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+
+    # revolving-door index map: dead block -> index of the last live block
+    # (or 0) so the fetch is a VMEM no-op re-use, not a new HBM read.
+    def build_kmap(keep_flat):
+        keep2 = keep_flat.reshape(nm, nk)
+        idx = jnp.arange(nk)[None, :] * (keep2 != 0)
+        kmap = jax.lax.associative_scan(jnp.maximum, idx, axis=1)
+        return kmap.reshape(-1).astype(jnp.int32)
+
+    kmap = build_kmap(keep)
+
+    grid = (nm, nn, nk)
+    kernel = functools.partial(_spmm_kernel, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bs, bc),
+                             lambda i, j, k, kmap, keep: (i, kmap[i * nk + k])),
+                pl.BlockSpec((bc, bn), lambda i, j, k, kmap, keep: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bn), lambda i, j, k, kmap, keep: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(kmap, keep, x, w)
+    return out

@@ -1,0 +1,2 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
+from .mesh import make_production_mesh, make_host_mesh, batch_axes  # noqa: F401

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init,
+# and the production meshes below need 512 placeholder host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch command-r-35b \
+      --shape train_4k [--multi-pod] [--out benchmarks/artifacts]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Success criterion (assignment): .lower().compile() succeeds, prints
+memory_analysis() (fits) and cost_analysis() (FLOPs/bytes for §Roofline).
+Artifacts are written as JSON for benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def _compile_cell(arch, shape_name, mesh, overrides):
+    from .steps import build_cell
+    cell = build_cell(arch, shape_name, mesh, overrides)
+    with mesh:
+        compiled = cell.fn.lower(*cell.args).compile()
+    return cell, compiled
+
+
+def _costs(compiled, rl):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = rl.collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            coll)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "baseline") -> dict:
+    """Compile the FULL rolled model (memory_analysis = the fits-proof),
+    then two small UNROLLED variants A (1 superlayer) / B (2 superlayers)
+    whose exact per-superlayer cost delta extrapolates the true FLOPs /
+    bytes / collective bytes — XLA's cost analysis counts while-loop
+    (scan) bodies once, so the rolled counts alone undercount by the trip
+    count (see EXPERIMENTS.md §Dry-run methodology)."""
+    import jax
+    from . import roofline as rl
+    from .mesh import make_production_mesh
+    from .. import configs as cfglib
+    from ..models.lm.model import layer_runs
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    cell, compiled = _compile_cell(arch, shape_name, mesh, overrides)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    mem = compiled.memory_analysis()
+    print(f"--- memory_analysis [{arch} x {shape_name} x "
+          f"{'multi' if multi_pod else 'single'}-pod] ---")
+    print(mem)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    print("--- cost_analysis (per-device, rolled; see extrapolation below) ---")
+    print({k: v for k, v in sorted(ca.items()) if "{" not in k})
+
+    # --- A/B extrapolation over superlayer count ---
+    cfg = cell.cfg
+    P = len(cfg.layer_pattern)
+    g, r = divmod(cfg.n_layers, P)
+    ov = dict(overrides or {})
+    ov["unroll_runs"] = True
+    # cost-extraction variants take the attend_full path (identical op
+    # totals, but no attention-internal scan — XLA's cost analysis counts
+    # while bodies once, which would otherwise hide attention FLOPs) and
+    # the banded local path for the same reason. memory_analysis above is
+    # from the production (chunked/rolled) compile.
+    from ..configs.shapes import SHAPES as _SH
+    ov.setdefault("attn_chunk", max(_SH[shape_name].seq_len, cfg.attn_chunk))
+    ov.setdefault("local_impl", "banded")
+
+    def variant(m):
+        v = dict(ov)
+        v["n_layers"] = m * P + r
+        if cfg.encoder_layers:
+            v["encoder_layers"] = max(1, round(cfg.encoder_layers * m / max(g, 1)))
+        _, comp = _compile_cell(arch, shape_name, mesh, v)
+        return _costs(comp, rl)
+
+    if g > 1:
+        fA, bA, cA = variant(1)
+        fB, bB, cB = variant(2)
+        scale = g - 1
+        flops_pd = fA + scale * (fB - fA)
+        bytes_pd = bA + scale * (bB - bA)
+        coll = {k: cA[k] + scale * (cB[k] - cA[k]) for k in cA}
+    else:
+        flops_pd, bytes_pd, coll = _costs(compiled, rl)
+    print(f"extrapolated per-device: flops={flops_pd:.4g} bytes={bytes_pd:.4g} "
+          f"collective={coll['total']:.4g}")
+
+    cfg = cell.cfg
+    counts = cfg.param_counts()
+    kind = cell.shape.kind
+    tokens = (cell.shape.global_batch * cell.shape.seq_len
+              if kind in ("train", "prefill") else cell.shape.global_batch)
+    roof = rl.analyze(flops_pd=flops_pd, bytes_pd=bytes_pd,
+                      coll_bytes_pd=coll["total"], chips=chips,
+                      n_params_active=counts["active"], tokens=tokens,
+                      kind=kind)
+
+    art = {
+        "arch": arch, "shape": shape_name, "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": kind, "tokens": tokens,
+        "params_total": counts["total"], "params_active": counts["active"],
+        "flops_per_device": flops_pd, "bytes_per_device": bytes_pd,
+        "collective_bytes_per_device": coll,
+        "memory_analysis": str(mem),
+        "peak_memory_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "argument_size": getattr(mem, "argument_size_in_bytes", None),
+        "output_size": getattr(mem, "output_size_in_bytes", None),
+        "roofline": roof.row(),
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "mp" if multi_pod else "sp"
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{pod}__{tag}.json")
+        with open(fn, "w") as f:
+            json.dump(art, f, indent=1)
+        print("artifact ->", fn)
+    r = roof
+    print(f"roofline: compute={r.compute_s*1e3:.2f}ms memory={r.memory_s*1e3:.2f}ms "
+          f"collective={r.collective_s*1e3:.2f}ms bottleneck={r.bottleneck} "
+          f"useful={r.useful_ratio:.3f} fraction={r.fraction:.3f}")
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--overrides", default=None, help="JSON dict of LMConfig overrides")
+    args = ap.parse_args()
+
+    from .. import configs
+    from ..configs.shapes import cells as shape_cells
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    todo: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in configs.ARCHS:
+            for sc in shape_cells(arch):
+                todo.append((arch, sc.name, False))
+                if args.both_meshes or args.multi_pod:
+                    todo.append((arch, sc.name, True))
+    else:
+        meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    failures = []
+    for arch, shape, mp in todo:
+        print(f"\n=== DRY-RUN {arch} x {shape} x {'2x16x16' if mp else '16x16'} ===",
+              flush=True)
+        try:
+            run_cell(arch, shape, mp, args.out, overrides, args.tag)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(todo)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline terms from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+TPU v5e hardware constants (per assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Convention: after SPMD partitioning, ``compiled.cost_analysis()`` describes
+the PER-DEVICE program, so flops/bytes here are per-device; the assignment
+formula ``HLO_FLOPs / (chips × peak)`` with global FLOPs is identical to
+``flops_per_device / peak``. Collective bytes are summed from the
+per-device HLO, so they are also per-device wire bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> float:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*)$")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum wire bytes of every collective op in the (per-device) HLO.
+
+    Detection keys off the instruction NAME (XLA names instructions after
+    their opcode: %all-gather.42, %all-reduce.1, ...), which is immune to
+    opcode strings appearing inside op_name metadata. The wire-byte proxy
+    per op is the largest shape printed before the opcode token (the
+    result for all-gather/all-to-all/permute — the gathered size; the
+    operand-sized ring payload for all-reduce; for reduce-scatter the
+    result prefix is the scattered shard, an undercount we accept
+    uniformly across cells). ``-done`` halves of async pairs are skipped.
+    """
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        kind = next((k for k in COLLECTIVES if name.startswith(k)), None)
+        if kind is None or name.startswith(f"{kind}-done"):
+            continue
+        opc = f"{kind}-start(" if name.startswith(f"{kind}-start") else f"{kind}("
+        prefix = rhs.split(opc)[0]
+        sizes = [_shape_bytes(s) for s in _SHAPE_RE.finditer(prefix)]
+        if not sizes:
+            continue
+        out[kind] += max(sizes)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # 6·N·D (train) / 2·N_active·D (inference)
+    hlo_flops_global: float
+    useful_ratio: float         # model_flops / hlo_flops_global
+    ideal_s: float              # model_flops / (chips·peak)
+    fraction: float             # ideal_s / max(term)  -> roofline fraction
+    bottleneck: str
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(*, flops_pd: float, bytes_pd: float, coll_bytes_pd: float,
+            chips: int, n_params_active: int, tokens: int, kind: str) -> Roofline:
+    compute_s = flops_pd / PEAK_FLOPS
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_bytes_pd / ICI_BW
+    mult = 6.0 if kind == "train" else 2.0
+    model_flops = mult * n_params_active * tokens
+    hlo_global = flops_pd * chips
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    frac = ideal / max(max(terms.values()), 1e-30)
+    return Roofline(compute_s, memory_s, collective_s, model_flops,
+                    hlo_global, model_flops / max(hlo_global, 1e-30),
+                    ideal, frac, bottleneck)

@@ -1,0 +1,109 @@
+"""Batched serving launcher: prefill a batch of prompts, then decode with
+the sharded KV cache (+ Zebra KV-cache block compression accounting).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..data import LMDatasetConfig, lm_batch
+from ..distributed import sharding as shd
+from ..models.lm import LM
+from .mesh import make_host_mesh
+from .steps import make_decode_step, make_prefill
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--t-obj", type=float, default=0.1)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    cfg = cfg.replace(param_dtype="bfloat16",
+                      zebra_sites=tuple(cfg.zebra_sites) + ("kv_cache",),
+                      zebra_t_obj=args.t_obj)
+    mesh = make_host_mesh(model=args.model_parallel)
+    model = LM(cfg)
+
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    pshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        shd.param_specs(params, cfg, mesh), is_leaf=lambda x: isinstance(x, P))
+    params = jax.device_put(params, pshard)
+
+    prefill = jax.jit(make_prefill(model, mesh), static_argnames=())
+    decode = jax.jit(make_decode_step(model, mesh), donate_argnums=(2,))
+
+    ds = LMDatasetConfig(vocab=cfg.vocab)
+    B, S = args.batch, args.prompt_len
+    prompts = jnp.asarray(lm_batch(ds, B, S, 0)[:, :S])
+    enc = (jnp.zeros((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+           if cfg.encoder_layers else None)
+
+    cache_len = S + args.gen
+    t0 = time.time()
+    if enc is not None:
+        logits, state, aux = jax.block_until_ready(
+            model_prefill_pad(prefill, params, prompts, cache_len, enc))
+    else:
+        logits, state, aux = jax.block_until_ready(
+            model_prefill_pad(prefill, params, prompts, cache_len))
+    t_pref = time.time() - t0
+    kv_zero_frac = float(aux[1] / max(float(aux[2]), 1.0))
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, state = decode(params, tok, state, jnp.int32(S + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"[serve] {cfg.name} batch={B} prompt={S} gen={args.gen}")
+    print(f"  prefill: {t_pref*1e3:.1f} ms  decode: "
+          f"{t_dec/max(args.gen-1,1)*1e3:.2f} ms/token")
+    print(f"  zebra kv-cache zero-block fraction: {kv_zero_frac:.3f} "
+          f"(cache-read traffic cut by that fraction)")
+    print("  sample continuation:", gen[0, :16].tolist())
+
+
+def model_prefill_pad(prefill_fn, params, prompts, cache_len, enc=None):
+    """prefill builds a cache sized to the prompt; pad it to cache_len so
+    decode can run. (One jit'd pad via device_put keeps shardings.)"""
+    if enc is not None:
+        logits, (caches, enc_out), aux = prefill_fn(params, prompts, enc)
+    else:
+        logits, (caches, enc_out), aux = prefill_fn(params, prompts)
+    S = prompts.shape[1]
+    pad = cache_len - S
+
+    def padk(x):
+        if x.ndim >= 4 and x.shape[-3] == S:   # (.., B, T, H, hd) attn caches
+            cfgpad = [(0, 0)] * x.ndim
+            cfgpad[-3] = (0, pad)
+            return jnp.pad(x, cfgpad)
+        return x
+    caches = jax.tree_util.tree_map(padk, caches)
+    return logits, (caches, enc_out), aux
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""jit-able train / prefill / decode steps with full sharding annotations.
+
+``build_cell(arch, shape, mesh)`` returns everything the dry-run, the
+trainer and the server need: the jitted function, ShapeDtypeStruct args
+(no allocation), and the in/out shardings. The same builders drive real
+execution on hardware — dry-run and production share one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.shapes import SHAPES, ShapeCell
+from ..distributed import sharding as shd
+from ..distributed.ctx import sharding_hints
+from ..models.lm import LM, LMConfig
+from ..optim import adamw, apply_updates, clip_by_global_norm, warmup_cosine
+from ..optim.compress import compressed_gradients
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeCell
+    cfg: LMConfig
+    fn: Callable                    # jitted
+    args: tuple                     # ShapeDtypeStructs
+    model: LM
+    donate: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _hint_args(cfg, mesh):
+    from ..distributed.sharding import dp as dp_fn
+    pure_dp = getattr(cfg, "sharding_profile", "tp") == "dp"
+    return dict(dp=dp_fn(mesh, cfg), tp=None if pure_dp else "model")
+
+
+def make_train_step(model: LM, opt, mesh, compress: str = "bf16",
+                    grad_clip: float = 1.0):
+    cfg = model.cfg
+
+    def train_step(state, batch):
+        with sharding_hints(mesh, **_hint_args(cfg, mesh)):
+            params = state["params"]
+            K = max(getattr(cfg, "grad_accum", 1), 1)
+
+            def loss_fn(p, toks, enc):
+                return model.loss(p, toks, "train", enc)
+
+            if K == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch["tokens"],
+                                           batch.get("enc_feats"))
+            else:
+                # microbatched gradient accumulation: activation memory /K
+                B = batch["tokens"].shape[0]
+                toks = batch["tokens"].reshape(K, B // K, -1)
+                enc = batch.get("enc_feats")
+                enc = (enc.reshape(K, B // K, *enc.shape[1:])
+                       if enc is not None else None)
+
+                def micro(acc, i):
+                    g_acc, l_acc, m_acc = acc
+                    e_i = enc[i] if enc is not None else None
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, toks[i], e_i)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+                    return (g_acc, l_acc + l, m_acc), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                m0 = {k: jnp.float32(0.0) for k in
+                      ("ce", "zebra_reg", "zero_frac", "router_aux")}
+                (grads, loss, metrics), _ = jax.lax.scan(
+                    micro, (g0, jnp.float32(0.0), m0), jnp.arange(K))
+                grads = jax.tree_util.tree_map(lambda g: g / K, grads)
+                loss = loss / K
+                metrics = jax.tree_util.tree_map(lambda m: m / K, metrics)
+            grads, comp_state = compressed_gradients(
+                grads, state["compress"], compress)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            updates, opt_state = opt.update(grads, state["opt"], params,
+                                            state["step"])
+            params = apply_updates(params, updates)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            new_state = {"params": params, "opt": opt_state,
+                         "compress": comp_state, "step": state["step"] + 1}
+            return new_state, metrics
+    return train_step
+
+
+def make_train_state_shape(model: LM, opt, compress: str = "bf16"):
+    """Abstract train state via eval_shape (no allocation)."""
+    def init_fn(key):
+        params = model.init(key)
+        from ..optim.compress import init_state
+        return {"params": params, "opt": opt.init(params),
+                "compress": init_state(params, compress),
+                "step": jnp.zeros((), jnp.int32)}
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0)), init_fn
+
+
+def train_state_specs(state_shape, cfg: LMConfig, mesh):
+    return {
+        "params": shd.param_specs(state_shape["params"], cfg, mesh),
+        "opt": shd.param_specs(state_shape["opt"], cfg, mesh),
+        "compress": shd.param_specs(state_shape["compress"], cfg, mesh),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill(model: LM, mesh):
+    def prefill(params, tokens, enc_feats=None):
+        with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
+            cache_len = tokens.shape[1]
+            return model.prefill(params, tokens, cache_len, enc_feats)
+    return prefill
+
+
+def make_decode_step(model: LM, mesh):
+    def decode_step(params, token, state, pos):
+        with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
+            return model.decode_step(params, token, state, pos)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Cell builder (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+def cell_config(arch: str, shape: ShapeCell, overrides: dict | None = None) -> LMConfig:
+    cfg = configs.get(arch)
+    kw: dict[str, Any] = dict(overrides or {})
+    if shape.kind in ("prefill", "decode"):
+        kw.setdefault("param_dtype", "bfloat16")   # serving weights in bf16
+        kw.setdefault("zebra_sites", tuple(cfg.zebra_sites) + ("kv_cache",))
+    return cfg.replace(**kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_cell(arch: str, shape_name: str, mesh, overrides: dict | None = None,
+               compress: str = "bf16") -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = cell_config(arch, shape, overrides)
+    model = LM(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dpspec = shd.batch_spec(mesh, 2, B, cfg)
+    ns = lambda spec: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        opt = adamw(warmup_cosine(3e-4, 2000, 100_000))
+        state_shape, _ = make_train_state_shape(model, opt, compress)
+        sspec = train_state_specs(state_shape, cfg, mesh)
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+        bspec = {"tokens": shd.batch_spec(mesh, 2, B, cfg)}
+        if cfg.encoder_layers:
+            batch["enc_feats"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            bspec["enc_feats"] = shd.batch_spec(mesh, 3, B, cfg)
+        fn = jax.jit(make_train_step(model, opt, mesh, compress),
+                     in_shardings=(ns(sspec), ns(bspec)),
+                     out_shardings=(ns(sspec), None),
+                     donate_argnums=(0,))
+        return Cell(arch, shape, cfg, fn, (state_shape, batch), model, (0,))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = shd.param_specs(params_shape, cfg, mesh)
+
+    if shape.kind == "prefill":
+        tokens = _sds((B, S), jnp.int32)
+        args = [params_shape, tokens]
+        in_sh = [ns(pspec), NamedSharding(mesh, dpspec)]
+        if cfg.encoder_layers:
+            args.append(_sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16))
+            in_sh.append(NamedSharding(mesh, shd.batch_spec(mesh, 3, B, cfg)))
+        fn = jax.jit(make_prefill(model, mesh), in_shardings=tuple(in_sh))
+        return Cell(arch, shape, cfg, fn, tuple(args), model)
+
+    # decode: one new token with a seq_len KV cache
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, B, S))
+    cspec = [shd.cache_specs(c, cfg, mesh) for c in cache_shape]
+    enc_shape = None
+    espec = None
+    if cfg.encoder_layers:
+        enc_shape = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        espec = shd.batch_spec(mesh, 3, B, cfg)
+    state_shape = (cache_shape, enc_shape)
+    sspec = (cspec, espec)
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    fn = jax.jit(make_decode_step(model, mesh),
+                 in_shardings=(ns(pspec), NamedSharding(mesh, dpspec),
+                               ns(sspec), None),
+                 out_shardings=(None, ns(sspec)),
+                 donate_argnums=(2,))
+    return Cell(arch, shape, cfg, fn, (params_shape, token, state_shape, pos),
+                model, (2,))
+
+
+def input_specs(arch: str, shape_name: str, mesh, overrides: dict | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    return build_cell(arch, shape_name, mesh, overrides).args

@@ -1,0 +1,77 @@
+"""Shared machinery for the paper's CNN zoo (VGG16 / ResNet / MobileNet).
+
+Every model is an object with:
+  init(key)                -> {"params", "state", "zebra"}
+  apply(variables, x, train, zcfg) -> (logits, new_state, zebra_auxes)
+  map_specs(input_hw)      -> [MapSpec] for bandwidth accounting (§bandwidth)
+
+A *Zebra site* sits after every ReLU that produces a DRAM-bound activation
+map (paper Fig. 2: Zebra is applied to the activation maps). Block size
+follows the paper: `zcfg.block_hw` normally, shrinking to the largest
+divisor when a deep map is smaller than the block (paper: "we set block
+size as 2 when the size of activation maps goes to 2x2").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.zebra import ZebraConfig, init_threshold_net, zebra_cnn
+from ...core.bandwidth import MapSpec
+
+
+def site_block(h: int, w: int, want: int) -> int:
+    b = min(want, h, w)
+    while h % b or w % b:
+        b -= 1
+    return max(b, 1)
+
+
+class ZebraSites:
+    """Collects threshold nets at init and auxes at apply time."""
+
+    def __init__(self, zcfg: ZebraConfig):
+        self.zcfg = zcfg
+        self.auxes: list = []
+        self.specs: list[MapSpec] = []
+        self._tnets: dict = {}
+        self._i = 0
+
+    # ---- init-time ----
+    def init_site(self, key, channels: int) -> tuple[str, dict]:
+        name = f"z{self._i}"
+        self._i += 1
+        return name, init_threshold_net(key, channels)
+
+    # ---- apply-time ----
+    def __call__(self, x: jax.Array, zebra_params: dict | None) -> jax.Array:
+        name = f"z{self._i}"
+        self._i += 1
+        B, C, H, W = x.shape
+        b = site_block(H, W, self.zcfg.block_hw)
+        cfg = self.zcfg.replace(block_hw=b)
+        tnet = zebra_params.get(name) if zebra_params else None
+        if cfg.mode == "train" and tnet is None:
+            cfg = cfg.replace(enabled=False)   # site without a net: passthrough
+        y, aux = zebra_cnn(x, cfg, tnet)
+        self.auxes.append(aux)
+        self.specs.append(MapSpec(c=C, h=H, w=W, bits=cfg.act_bits, block=b))
+        return y
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def topk_accuracy(logits: jax.Array, labels: jax.Array, k: int = 5) -> jax.Array:
+    topk = jax.lax.top_k(logits, k)[1]
+    return jnp.mean(jnp.any(topk == labels[:, None], axis=-1).astype(jnp.float32))

@@ -1,0 +1,83 @@
+"""MobileNetV1 (CIFAR variant) — depthwise-separable convs, Zebra after
+every ReLU (both the depthwise and pointwise activations hit DRAM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (bn_apply, bn_init, conv_apply, conv_init, dense_apply,
+                      dense_init, global_avg_pool)
+from ...core.zebra import ZebraConfig
+from ...core.bandwidth import MapSpec
+from .common import ZebraSites, relu, site_block
+
+# (out_channels, stride) per separable block; CIFAR variant (stem stride 1)
+MB_PLAN = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+           (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1)]
+
+
+class MobileNetV1:
+    def __init__(self, num_classes=10, in_hw=32, width_mult: float = 1.0):
+        self.num_classes = num_classes
+        self.in_hw = in_hw
+        self.plan = [(max(8, int(c * width_mult)), s) for c, s in MB_PLAN]
+        self.stem_c = max(8, int(32 * width_mult))
+
+    def init(self, key, zcfg: ZebraConfig = ZebraConfig()):
+        keys = iter(jax.random.split(key, 256))
+        sites = ZebraSites(zcfg)
+        params, state, zebra = {}, {}, {}
+        params["stem"] = conv_init(next(keys), 3, self.stem_c, 3)
+        params["bn_stem"], state["bn_stem"] = bn_init(self.stem_c)
+        nm, tn = sites.init_site(next(keys), self.stem_c)
+        zebra[nm] = tn
+        c_in = self.stem_c
+        for i, (c, s) in enumerate(self.plan):
+            params[f"dw{i}"] = conv_init(next(keys), c_in, c_in, 3, groups=c_in)
+            params[f"bn_dw{i}"], state[f"bn_dw{i}"] = bn_init(c_in)
+            nm, tn = sites.init_site(next(keys), c_in)
+            zebra[nm] = tn
+            params[f"pw{i}"] = conv_init(next(keys), c_in, c, 1)
+            params[f"bn_pw{i}"], state[f"bn_pw{i}"] = bn_init(c)
+            nm, tn = sites.init_site(next(keys), c)
+            zebra[nm] = tn
+            c_in = c
+        params["fc"] = dense_init(next(keys), c_in, self.num_classes)
+        return {"params": params, "state": state, "zebra": zebra}
+
+    def apply(self, variables, x, train: bool, zcfg: ZebraConfig):
+        p, s, z = variables["params"], variables["state"], variables.get("zebra")
+        sites = ZebraSites(zcfg)
+        ns = {}
+        x = conv_apply(p["stem"], x)
+        x, ns["bn_stem"] = bn_apply(p["bn_stem"], s["bn_stem"], x, train)
+        x = sites(relu(x), z)
+        c_in = self.stem_c
+        for i, (c, st) in enumerate(self.plan):
+            x = conv_apply(p[f"dw{i}"], x, stride=st, groups=c_in)
+            x, ns[f"bn_dw{i}"] = bn_apply(p[f"bn_dw{i}"], s[f"bn_dw{i}"], x, train)
+            x = sites(relu(x), z)
+            x = conv_apply(p[f"pw{i}"], x)
+            x, ns[f"bn_pw{i}"] = bn_apply(p[f"bn_pw{i}"], s[f"bn_pw{i}"], x, train)
+            x = sites(relu(x), z)
+            c_in = c
+        x = global_avg_pool(x)
+        return dense_apply(p["fc"], x), ns, sites.auxes
+
+    def map_specs(self, in_hw: int | None = None, zcfg: ZebraConfig = ZebraConfig()):
+        hw = in_hw or self.in_hw
+        specs = []
+
+        def add(c, hw):
+            b = site_block(hw, hw, zcfg.block_hw)
+            specs.append(MapSpec(c=c, h=hw, w=hw, bits=zcfg.act_bits, block=b))
+
+        add(self.stem_c, hw)
+        c_in = self.stem_c
+        for c, st in self.plan:
+            if st == 2:
+                hw //= 2
+            add(c_in, hw)   # depthwise ReLU map
+            add(c, hw)      # pointwise ReLU map
+            c_in = c
+        return specs

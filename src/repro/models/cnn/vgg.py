@@ -1,0 +1,66 @@
+"""VGG-16 (CIFAR variant, conv-BN-ReLU + Zebra after every ReLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (bn_apply, bn_init, conv_apply, conv_init, dense_apply,
+                      dense_init, max_pool)
+from ...core.zebra import ZebraConfig
+from ...core.bandwidth import MapSpec
+from .common import ZebraSites, relu, site_block
+
+VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+class VGG16:
+    def __init__(self, num_classes: int = 10, in_hw: int = 32, width_mult: float = 1.0):
+        self.num_classes = num_classes
+        self.in_hw = in_hw
+        self.plan = [c if c == "M" else max(8, int(c * width_mult)) for c in VGG16_PLAN]
+
+    def init(self, key, zcfg: ZebraConfig = ZebraConfig()):
+        keys = iter(jax.random.split(key, 64))
+        params, state, zebra = {}, {}, {}
+        sites = ZebraSites(zcfg)
+        c_in, i = 3, 0
+        for c in self.plan:
+            if c == "M":
+                continue
+            params[f"conv{i}"] = conv_init(next(keys), c_in, c, 3)
+            params[f"bn{i}"], state[f"bn{i}"] = bn_init(c)
+            name, tnet = sites.init_site(next(keys), c)
+            zebra[name] = tnet
+            c_in, i = c, i + 1
+        params["fc"] = dense_init(next(keys), c_in, self.num_classes)
+        return {"params": params, "state": state, "zebra": zebra}
+
+    def apply(self, variables, x, train: bool, zcfg: ZebraConfig):
+        p, s, z = variables["params"], variables["state"], variables.get("zebra")
+        sites = ZebraSites(zcfg)
+        new_state = {}
+        i = 0
+        for c in self.plan:
+            if c == "M":
+                x = max_pool(x)
+                continue
+            x = conv_apply(p[f"conv{i}"], x)
+            x, new_state[f"bn{i}"] = bn_apply(p[f"bn{i}"], s[f"bn{i}"], x, train)
+            x = relu(x)
+            x = sites(x, z)
+            i += 1
+        x = jnp.mean(x, axis=(2, 3))
+        logits = dense_apply(p["fc"], x)
+        return logits, new_state, sites.auxes
+
+    def map_specs(self, in_hw: int | None = None, zcfg: ZebraConfig = ZebraConfig()):
+        hw = in_hw or self.in_hw
+        specs = []
+        for c in self.plan:
+            if c == "M":
+                hw //= 2
+                continue
+            b = site_block(hw, hw, zcfg.block_hw)
+            specs.append(MapSpec(c=c, h=hw, w=hw, bits=zcfg.act_bits, block=b))
+        return specs

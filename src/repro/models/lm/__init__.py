@@ -1,0 +1,2 @@
+from .config import LMConfig  # noqa: F401
+from .model import LM, layer_runs  # noqa: F401

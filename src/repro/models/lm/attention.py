@@ -1,0 +1,232 @@
+"""Attention for the LM stack: GQA + RoPE, three execution paths.
+
+* ``attend_full``  — reference O(S²)-memory masked attention (oracle, short
+  sequences, encoder/cross attention).
+* ``attend_chunked`` — memory-bounded causal attention: outer loop over
+  query chunks, inner checkpointed scan over KV chunks with online softmax
+  (flash-attention recurrence in pure JAX). Live memory O(Cq·Ck) per step;
+  backward recomputes per-chunk scores (remat), never materializing S².
+* ``attend_local`` — *exact* sliding-window attention in banded-chunk form:
+  window W == chunk; each query chunk attends [prev, self] chunks with an
+  in-band mask. Cost O(S·W), the sub-quadratic path used by gemma-3 local
+  layers, recurrentgemma, and long_500k decode.
+* ``attend_decode`` — one query token vs a (possibly seq-sharded) KV cache.
+
+Layout: q (B, S, Hq, hd), k/v (B, S, Hkv, hd), GQA via reshape to
+(B, S, Hkv, G, hd). All softmax math in fp32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30   # large-but-finite: keeps all-masked rows NaN-free
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference full attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q (B,S,Hkv,G,hd), k (B,T,Hkv,hd) -> (B,Hkv,G,S,T) fp32."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k, preferred_element_type=jnp.float32)
+
+
+def attend_full(q, k, v, *, causal: bool, window: int = 0,
+                q_offset: int = 0) -> jax.Array:
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd) * (hd ** -0.5)
+    s = _gqa_scores(qg, k)                                        # (B,Hkv,G,S,T)
+    if causal or window:
+        qi = jnp.arange(S) + q_offset
+        kj = jnp.arange(T)
+        ok = jnp.ones((S, T), bool)
+        if causal:
+            ok &= qi[:, None] >= kj[None, :]
+        if window:
+            ok &= qi[:, None] - kj[None, :] < window
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p.astype(v.dtype), v)
+    return o.reshape(B, S, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (online softmax + remat)
+# ---------------------------------------------------------------------------
+
+def attend_chunked(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                   skip_dead_chunks: bool = False) -> jax.Array:
+    """Memory-bounded attention. `skip_dead_chunks` drops fully-masked
+    KV chunks from the compute (perf lever; identical numerics)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Cq = min(chunk, S)
+    Ck = min(chunk, T)
+    assert S % Cq == 0 and T % Ck == 0, (S, T, chunk)
+    nq, nk = S // Cq, T // Ck
+    qg = (q.reshape(B, nq, Cq, Hkv, G, hd) * (hd ** -0.5)).astype(q.dtype)
+    kc = k.reshape(B, nk, Ck, Hkv, hd)
+    vc = v.reshape(B, nk, Ck, Hkv, hd)
+
+    def kv_step(carry, j, qi_blk, i):
+        m, l, acc = carry
+        kj = kc[:, j]
+        vj = vc[:, j]
+        s = jnp.einsum("bchgd,bthd->bhgct", qi_blk, kj,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * Cq + jnp.arange(Cq)
+            kpos = j * Ck + jnp.arange(Ck)
+            ok = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgct,bthd->bhgcd", p.astype(vj.dtype), vj)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    def q_block(i):
+        qi_blk = qg[:, i]                                        # (B,Cq,Hkv,G,hd)
+        m0 = jnp.full((B, Hkv, G, Cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, Cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, Cq, hd), jnp.float32)
+        body = jax.checkpoint(functools.partial(kv_step, qi_blk=qi_blk, i=i))
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(o, 3, 1)                             # (B,Cq,Hkv,G,hd)
+
+    o = jax.lax.map(q_block, jnp.arange(nq))                     # (nq,B,Cq,...)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, Hkv, G, hd)
+    return o.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Exact sliding-window attention, banded-chunk form
+# ---------------------------------------------------------------------------
+
+def attend_local(q, k, v, *, window: int) -> jax.Array:
+    """Causal sliding window: key j visible iff 0 <= qi - j < window.
+    Implemented with chunk size == window over [prev, self] chunk pairs."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    W = min(window, S)
+    assert S % W == 0, (S, window)
+    nc = S // W
+    qg = (q.reshape(B, nc, W, Hkv, G, hd) * (hd ** -0.5))
+    kc = k.reshape(B, nc, W, Hkv, hd)
+    vc = v.reshape(B, nc, W, Hkv, hd)
+    pad = jnp.zeros_like(kc[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([pad, kc[:, :-1]], 1), kc], axis=2)
+    v2 = jnp.concatenate([jnp.concatenate([pad, vc[:, :-1]], 1), vc], axis=2)
+    s = jnp.einsum("bnchgd,bnthd->bnhgct", qg, k2,
+                   preferred_element_type=jnp.float32)           # (B,nc,H,G,W,2W)
+    qi = jnp.arange(W)[:, None] + W                              # in-pair coords
+    kj = jnp.arange(2 * W)[None, :]
+    ok = (qi >= kj) & (qi - kj < W)
+    first = jnp.arange(2 * W)[None, :] >= W                      # chunk 0 has no prev
+    ok0 = ok & first
+    mask = jnp.where(jnp.arange(nc)[:, None, None] == 0, ok0[None], ok[None])
+    s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhgct,bnthd->bnchgd", p.astype(v2.dtype), v2)
+    return o.reshape(B, S, Hq, hd)
+
+
+def attend_local_scanned(q, k, v, *, window: int) -> jax.Array:
+    """Same sliding-window semantics as attend_local, but lax.map over the
+    chunk index with a checkpointed body: live score memory is ONE chunk's
+    (B, H, G, W, 2W) instead of all nc chunks at once, and the backward
+    recomputes scores per chunk (§Perf memory-term lever)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    W = min(window, S)
+    assert S % W == 0, (S, window)
+    nc = S // W
+    qg = q.reshape(B, nc, W, Hkv, G, hd) * (hd ** -0.5)
+    kc = k.reshape(B, nc, W, Hkv, hd)
+    vc = v.reshape(B, nc, W, Hkv, hd)
+    pad = jnp.zeros_like(kc[:, :1])
+    kpad = jnp.concatenate([pad, kc], axis=1)                     # (B,nc+1,..)
+    vpad = jnp.concatenate([pad, vc], axis=1)
+
+    qi = jnp.arange(W)[:, None] + W
+    kj = jnp.arange(2 * W)[None, :]
+    ok = (qi >= kj) & (qi - kj < W)
+    ok0 = ok & (kj >= W)                                          # no prev chunk
+
+    @jax.checkpoint
+    def body(i):
+        k2 = jax.lax.dynamic_slice_in_dim(kpad, i, 2, axis=1)
+        v2 = jax.lax.dynamic_slice_in_dim(vpad, i, 2, axis=1)
+        k2 = k2.reshape(B, 2 * W, Hkv, hd)
+        v2 = v2.reshape(B, 2 * W, Hkv, hd)
+        s = jnp.einsum("bchgd,bthd->bhgct", qg[:, i], k2,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.where(i == 0, ok0, ok)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgct,bthd->bchgd", p.astype(v2.dtype), v2)
+        return o
+
+    o = jax.lax.map(body, jnp.arange(nc))                         # (nc,B,W,..)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, Hq, hd)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Decode (single query token vs cache)
+# ---------------------------------------------------------------------------
+
+def attend_decode(q, k_cache, v_cache, pos, *, window: int = 0) -> jax.Array:
+    """q (B,1,Hq,hd); caches (B,T,Hkv,hd); pos: current index (scalar).
+    With `window`, the cache is a ring buffer of size T == window."""
+    B, _, Hq, hd = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(T)
+    if window:
+        valid = idx < jnp.minimum(pos + 1, T)                    # ring: all live
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, Hq, hd)

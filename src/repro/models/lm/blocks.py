@@ -1,0 +1,330 @@
+"""Layer assembly: pattern runs + scan-over-layers + KV/state caches.
+
+``cfg.layer_pattern`` defines a *superlayer* (e.g. gemma-3's 5 local + 1
+global). Layers are grouped into runs: ``n_layers // P`` stacked
+superlayers executed under ``jax.lax.scan`` (small HLO, fast compiles,
+XLA pipelines the per-layer collectives), plus one unrolled remainder.
+
+Every layer returns an aux 4-vector (zebra_reg, zero_frac·n_blocks,
+n_blocks, router_aux) accumulated in the scan carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..layers import lecun_normal, layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
+from ...core.zebra import init_token_threshold_net, zebra_tokens
+from ...distributed.ctx import hint_tokens
+from . import attention as attn
+from .config import LMConfig
+from .ffn import ffn_apply, ffn_init, moe_apply, moe_init, zebra_cfg_for
+from .rglru import rglru_apply, rglru_decode_step, rglru_init, rglru_init_cache
+from .ssm import (ssm_apply, ssm_decode_step, ssm_init, ssm_init_cache,
+                  ssm_prefill_state)
+
+Aux = jax.Array  # (4,) f32: [zebra_reg, zf*nblocks, nblocks, router_aux]
+
+
+def zero_aux() -> Aux:
+    return jnp.zeros((4,), jnp.float32)
+
+
+def _pack_aux(zaux, raux=0.0) -> Aux:
+    reg, zf, nb = zaux
+    return jnp.stack([reg, zf * nb, nb, jnp.float32(raux)])
+
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return rmsnorm_init(d) if cfg.norm == "rmsnorm" else layernorm_init(d)
+
+
+def _norm_apply(cfg, p, x):
+    return rmsnorm_apply(p, x) if cfg.norm == "rmsnorm" else layernorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _attn_proj_init(key, cfg: LMConfig, dtype):
+    """Head-major 4-D weights (d, H, hd) so TP shards the head axis."""
+    d, hd, nq, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"wq": lecun_normal(ks[0], (d, nq, hd), dtype, fan_in=d),
+         "wk": lecun_normal(ks[1], (d, nkv, hd), dtype, fan_in=d),
+         "wv": lecun_normal(ks[2], (d, nkv, hd), dtype, fan_in=d),
+         "wo": lecun_normal(ks[3], (nq, hd, d), dtype, fan_in=nq * hd)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def init_layer(key, typ: str, cfg: LMConfig, dtype, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"norm1": _norm_init(cfg)}
+    if typ in ("global", "local"):
+        p["attn"] = _attn_proj_init(ks[0], cfg, dtype)
+    elif typ == "rglru":
+        p["rec"] = rglru_init(ks[0], cfg, dtype)
+    elif typ == "ssm":
+        p["ssm"] = ssm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(typ)
+    if cross:
+        p["norm_c"] = _norm_init(cfg)
+        p["cross"] = _attn_proj_init(ks[1], cfg, dtype)
+    if typ != "ssm" and cfg.d_ff > 0:
+        p["norm2"] = _norm_init(cfg)
+        if cfg.is_moe:
+            p["moe"] = moe_init(ks[2], cfg, dtype)
+        else:
+            p["ffn"] = ffn_init(ks[2], cfg, dtype)
+    if cfg.zebra_enabled and "layer_out" in cfg.zebra_sites:
+        from .ffn import eff_block_ch
+        nblk = cfg.d_model // eff_block_ch(cfg.d_model, cfg)
+        p["zebra_out_tnet"] = init_token_threshold_net(ks[3], cfg.d_model, nblk)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg: LMConfig, rope):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope is not None:
+        cos, sin = rope
+        q = attn.apply_rope(q, cos, sin)
+        k = attn.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _self_attention(p, x, typ, cfg: LMConfig, rope, causal=True):
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, rope)
+    q = hint_tokens(q, "model", None)     # heads TP-sharded, batch DP
+    if typ == "local" and S > cfg.window:
+        local = (attn.attend_local_scanned if cfg.local_impl == "scanned"
+                 else attn.attend_local)
+        o = local(q, k, v, window=cfg.window)
+    elif S <= cfg.attn_chunk or not causal:
+        o = attn.attend_full(q, k, v, causal=causal,
+                             window=cfg.window if typ == "local" else 0)
+    else:
+        o = attn.attend_chunked(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    o = checkpoint_name(o, "attn_out")   # save_acts remat
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def _cross_attention(p, x, enc_kv, cfg: LMConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k, v = enc_kv
+    o = attn.attend_full(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def _enc_kv(p, enc_out, cfg: LMConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def _layer_out_zebra(p, x, cfg: LMConfig, mode: str):
+    if not (cfg.zebra_enabled and "layer_out" in cfg.zebra_sites):
+        return x, (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    from .ffn import eff_block_ch
+    zc = zebra_cfg_for(cfg, mode)
+    B, S, D = x.shape
+    bs = zc.block_seq if S % zc.block_seq == 0 else 1
+    bc = eff_block_ch(D, cfg)
+    y, aux = zebra_tokens(x, zc.replace(block_seq=bs, block_ch=bc),
+                          p.get("zebra_out_tnet"))
+    return y, (aux["reg"], aux["zero_frac"], jnp.float32(aux["n_blocks"]))
+
+
+def apply_layer(p, x, typ: str, cfg: LMConfig, mode: str, rope,
+                enc_out=None, causal=True) -> tuple[jax.Array, Aux]:
+    aux = zero_aux()
+    x = hint_tokens(x)          # pin batch sharding at every layer boundary
+    h = _norm_apply(cfg, p["norm1"], x)
+    if typ in ("global", "local"):
+        x = x + _self_attention(p["attn"], h, typ, cfg, rope, causal)
+    elif typ == "rglru":
+        x = x + rglru_apply(p["rec"], h, cfg)
+    elif typ == "ssm":
+        x = x + ssm_apply(p["ssm"], h, cfg)
+    if "cross" in p and enc_out is not None:
+        hc = _norm_apply(cfg, p["norm_c"], x)
+        x = x + _cross_attention(p["cross"], hc, _enc_kv(p["cross"], enc_out, cfg), cfg)
+    if "ffn" in p or "moe" in p:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if "moe" in p:
+            y, zaux, raux = _moe(p["moe"], h2, cfg, mode)
+            aux = aux + _pack_aux(zaux, raux)
+        else:
+            y, zaux = ffn_apply(p["ffn"], h2, cfg, mode)
+            aux = aux + _pack_aux(zaux)
+        x = x + y
+    x, zo = _layer_out_zebra(p, x, cfg, mode)
+    aux = aux + _pack_aux(zo)
+    return x, aux
+
+
+def _moe(p, h2, cfg: LMConfig, mode: str):
+    """Route to the shard_map'd pure-DP dispatch when the profile asks for
+    it and a mesh context is live; plain SPMD dispatch otherwise."""
+    if cfg.sharding_profile == "dp":
+        from ...distributed.ctx import _MESH, dp_axes
+        mesh = _MESH.get()
+        if mesh is not None:
+            from .ffn import moe_apply_dp
+            return moe_apply_dp(p, h2, cfg, mode, mesh, tuple(dp_axes()))
+    return moe_apply(p, h2, cfg, mode)
+
+
+# ---------------------------------------------------------------------------
+# Caches + decode / prefill per layer
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(typ: str, cfg: LMConfig, batch: int, cache_len: int, dtype):
+    if typ in ("global", "local"):
+        T = min(cfg.window, cache_len) if typ == "local" else cache_len
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, T, hkv, hd), dtype),
+                "v": jnp.zeros((batch, T, hkv, hd), dtype)}
+    if typ == "rglru":
+        return rglru_init_cache(cfg, batch, dtype)
+    if typ == "ssm":
+        return ssm_init_cache(cfg, batch, dtype)
+    raise ValueError(typ)
+
+
+def apply_layer_decode(p, x, cache, typ: str, cfg: LMConfig, pos, rope1,
+                       enc_out=None):
+    """x (B,1,d). Returns (x, new_cache)."""
+    h = _norm_apply(cfg, p["norm1"], x)
+    if typ in ("global", "local"):
+        q, k, v = _qkv(p["attn"], h, cfg, rope1)
+        T = cache["k"].shape[1]
+        slot = (pos % T) if typ == "local" else pos
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        o = attn.attend_decode(q, kc, vc, pos,
+                               window=cfg.window if typ == "local" else 0)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        cache = {"k": kc, "v": vc}
+    elif typ == "rglru":
+        y, cache = rglru_decode_step(p["rec"], h, cache, cfg)
+        x = x + y
+    elif typ == "ssm":
+        y, cache = ssm_decode_step(p["ssm"], h, cache, cfg)
+        x = x + y
+    if "cross" in p and enc_out is not None:
+        hc = _norm_apply(cfg, p["norm_c"], x)
+        x = x + _cross_attention(p["cross"], hc, _enc_kv(p["cross"], enc_out, cfg), cfg)
+    if "ffn" in p or "moe" in p:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if "moe" in p:
+            y, _, _ = moe_apply(p["moe"], h2, cfg, "infer")
+        else:
+            y, _ = ffn_apply(p["ffn"], h2, cfg, "infer")
+        x = x + y
+    return x, cache
+
+
+def apply_layer_prefill(p, x, typ: str, cfg: LMConfig, rope, cache_len: int,
+                        enc_out=None):
+    """Forward + emit decode cache. Returns (x, cache, aux)."""
+    B, S, _ = x.shape
+    h = _norm_apply(cfg, p["norm1"], x)
+    aux = zero_aux()
+    if typ in ("global", "local"):
+        q, k, v = _qkv(p["attn"], h, cfg, rope)
+        if typ == "local" and S > cfg.window:
+            local = (attn.attend_local_scanned if cfg.local_impl == "scanned"
+                     else attn.attend_local)
+            o = local(q, k, v, window=cfg.window)
+        elif S <= cfg.attn_chunk:
+            o = attn.attend_full(q, k, v, causal=True,
+                                 window=cfg.window if typ == "local" else 0)
+        else:
+            o = attn.attend_chunked(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        if cfg.zebra_enabled and "kv_cache" in cfg.zebra_sites:
+            # beyond-paper: Zebra block-compress the cache at the HBM write
+            zc = zebra_cfg_for(cfg, "infer")
+            kf = k.reshape(B, S, -1)
+            vf = v.reshape(B, S, -1)
+            bs = zc.block_seq if S % zc.block_seq == 0 else 1
+            bc = zc.block_ch if kf.shape[-1] % zc.block_ch == 0 else kf.shape[-1]
+            zc = zc.replace(block_seq=bs, block_ch=bc)
+            kz, kaux = zebra_tokens(kf, zc)
+            vz, vaux = zebra_tokens(vf, zc)
+            k = kz.reshape(k.shape)
+            v = vz.reshape(v.shape)
+            aux = aux + _pack_aux((kaux["reg"], kaux["zero_frac"],
+                                   jnp.float32(kaux["n_blocks"])))
+            aux = aux + _pack_aux((vaux["reg"], vaux["zero_frac"],
+                                   jnp.float32(vaux["n_blocks"])))
+        if typ == "local":
+            T = min(cfg.window, cache_len)
+            cache = {"k": k[:, -T:].astype(x.dtype), "v": v[:, -T:].astype(x.dtype)}
+            if T > S:
+                pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
+                cache = {n: jnp.pad(c, pad) for n, c in cache.items()}
+        else:
+            pad = ((0, 0), (0, cache_len - S), (0, 0), (0, 0))
+            cache = {"k": jnp.pad(k, pad).astype(x.dtype),
+                     "v": jnp.pad(v, pad).astype(x.dtype)}
+    elif typ == "rglru":
+        gate = jax.nn.gelu(h @ p["rec"]["w_gate_branch"].astype(x.dtype))
+        from .rglru import _causal_conv1d, _gates
+        u = _causal_conv1d(h @ p["rec"]["w_rec_branch"].astype(x.dtype),
+                           p["rec"]["conv_w"].astype(x.dtype))
+        a, b = _gates(p["rec"], u)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = (hseq.astype(x.dtype) * gate) @ p["rec"]["w_out"].astype(x.dtype)
+        x = x + y
+        cache = {"h": hseq[:, -1], "conv": (h @ p["rec"]["w_rec_branch"].astype(x.dtype))[:, -(cfg.conv_width - 1):]}
+    elif typ == "ssm":
+        # run full SSD then rebuild the final state with a 1-step replay of
+        # the chunk recurrence (cheap: states are (B,nh,ds,hd))
+        y = ssm_apply(p["ssm"], h, cfg)
+        x = x + y
+        cache = ssm_prefill_state(p["ssm"], h, cfg)
+    if "cross" in p and enc_out is not None:
+        hc = _norm_apply(cfg, p["norm_c"], x)
+        x = x + _cross_attention(p["cross"], hc, _enc_kv(p["cross"], enc_out, cfg), cfg)
+    if "ffn" in p or "moe" in p:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if "moe" in p:
+            y, zaux, raux = moe_apply(p["moe"], h2, cfg, "infer")
+            aux = aux + _pack_aux(zaux, raux)
+        else:
+            y, zaux = ffn_apply(p["ffn"], h2, cfg, "infer")
+            aux = aux + _pack_aux(zaux)
+        x = x + y
+    x, zo = _layer_out_zebra(p, x, cfg, "infer")
+    aux = aux + _pack_aux(zo)
+    return x, cache, aux

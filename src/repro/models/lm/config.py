@@ -1,0 +1,147 @@
+"""LM architecture config — one frozen dataclass drives the whole stack.
+
+``layer_pattern`` is cycled over ``n_layers``; element types:
+  "global"  full causal self-attention
+  "local"   sliding-window self-attention (window = cfg.window)
+  "rglru"   Griffin RG-LRU recurrent block (temporal conv + gated LRU)
+  "ssm"     Mamba-2 SSD block
+Every layer is followed by its FFN (dense or MoE) except "ssm"/"rglru"
+blocks in pure-SSM archs where the block already contains the gated MLP
+(Mamba-2 convention: no separate FFN when d_ff == 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    family: str = "dense"            # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int = 4
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_ff: int = 2048
+    vocab: int = 32000
+    head_dim: int = 0                # 0 => d_model // n_heads
+    layer_pattern: tuple[str, ...] = ("global",)
+    window: int = 1024               # sliding-window size for "local"
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- Mamba-2 ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # --- RG-LRU ---
+    lru_dim: int = 0                 # 0 => d_model
+    conv_width: int = 4
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    enc_seq: int = 1500              # stub frontend frames
+    # --- compute/memory knobs (perf levers, see EXPERIMENTS §Perf) ---
+    attn_chunk: int = 1024           # q/kv chunk for chunked attention
+    ce_chunk: int = 1024             # 0 = unchunked CE; else seq-chunk size
+                                     # (bounds logits to (B,chunk,V) — the
+                                     # big-vocab memory lever, §Perf)
+    remat: str = "block"             # none | block
+    unroll_runs: bool = False        # unroll layer scans (dry-run cost
+                                     # analysis: XLA counts while bodies once)
+    grad_accum: int = 1              # microbatch accumulation steps inside
+                                     # train_step (activation memory / K)
+    sharding_profile: str = "tp"     # "tp" (FSDP+TP/EP) | "dp" (pure data
+                                     # parallel over data x model — right for
+                                     # small-expert MoE, see §Perf granite)
+    local_impl: str = "banded"       # "banded" | "scanned" local attention
+                                     # (scanned = chunk-scan + remat, bounds
+                                     # the score materialization, §Perf)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # --- Zebra integration (the paper's technique) ---
+    zebra_enabled: bool = True
+    zebra_t_obj: float = 0.1
+    zebra_block_seq: int = 8
+    zebra_block_ch: int = 128
+    zebra_sites: tuple[str, ...] = ("ffn_hidden",)  # +"layer_out", +"kv_cache"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.lru_dim == 0:
+            object.__setattr__(self, "lru_dim", self.d_model)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def layer_types(self) -> tuple[str, ...]:
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def d_inner(self) -> int:        # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ----- parameter counting (for MODEL_FLOPS = 6·N·D roofline term) -----
+    def param_counts(self) -> dict[str, int]:
+        d, hd = self.d_model, self.head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        emb = self.vocab * d
+        out_head = 0 if self.tie_embeddings else self.vocab * d
+        per_attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.qkv_bias:
+            per_attn += (nq + 2 * nkv) * hd
+        if self.act == "swiglu":
+            per_ffn_dense = 3 * d * self.d_ff
+        else:
+            per_ffn_dense = 2 * d * self.d_ff + self.d_ff + d
+        total = emb + out_head
+        active = total
+        for t in self.layer_types:
+            if t in ("global", "local"):
+                total += per_attn
+                active += per_attn
+                if self.is_moe:
+                    total += self.n_experts * per_ffn_dense + d * self.n_experts
+                    active += self.top_k * per_ffn_dense + d * self.n_experts
+                elif self.d_ff > 0:
+                    total += per_ffn_dense
+                    active += per_ffn_dense
+            elif t == "rglru":
+                dl = self.lru_dim
+                blk = 2 * d * dl + dl * d + self.conv_width * dl + 2 * dl * dl + 2 * dl
+                total += blk
+                active += blk
+                if self.d_ff > 0:
+                    total += per_ffn_dense
+                    active += per_ffn_dense
+            elif t == "ssm":
+                di, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                blk = d * (2 * di + 2 * ds + nh) + di * d + 2 * nh + di
+                total += blk
+                active += blk
+            total += 2 * d  # norms
+            active += 2 * d
+        if self.encoder_layers:
+            enc = self.encoder_layers * (per_attn + per_ffn_dense + 2 * d)
+            dec_cross = self.n_layers * (per_attn + d)
+            total += enc + dec_cross
+            active += enc + dec_cross
+        return {"total": int(total), "active": int(active)}

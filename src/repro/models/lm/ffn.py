@@ -1,0 +1,176 @@
+"""FFN blocks: dense (SwiGLU / GELU) and MoE (top-k, sort-based dispatch),
+each with a Zebra site on the hidden activation map — the LM integration of
+the paper's technique (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.zebra import ZebraConfig, init_token_threshold_net, zebra_tokens
+from ...distributed.ctx import dp_axes, hint, hint_tokens, tp_axis
+from ..layers import lecun_normal
+from .config import LMConfig
+
+
+def zebra_cfg_for(cfg: LMConfig, mode: str) -> ZebraConfig:
+    return ZebraConfig(enabled=cfg.zebra_enabled, t_obj=cfg.zebra_t_obj,
+                       block_seq=cfg.zebra_block_seq, block_ch=cfg.zebra_block_ch,
+                       mode=mode)
+
+
+def eff_block_ch(f: int, cfg: LMConfig) -> int:
+    """Channel-block size actually used for a width-f map (fallback: one
+    block spanning the whole width when f doesn't divide)."""
+    return cfg.zebra_block_ch if f % cfg.zebra_block_ch == 0 else f
+
+
+def _zebra_site(h: jax.Array, cfg: LMConfig, tnet, mode: str):
+    """h: (B, S, F). Returns (h', (reg, zero_frac, n_blocks))."""
+    if not cfg.zebra_enabled or "ffn_hidden" not in cfg.zebra_sites:
+        return h, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+    zc = zebra_cfg_for(cfg, mode)
+    B, S, F = h.shape
+    bs = zc.block_seq if S % zc.block_seq == 0 else 1
+    bc = eff_block_ch(F, cfg)
+    zc = zc.replace(block_seq=bs, block_ch=bc)
+    y, aux = zebra_tokens(h, zc, tnet)
+    nb = jnp.float32(aux["n_blocks"])
+    return y, (aux["reg"], aux["zero_frac"], nb)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: LMConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {}
+    if cfg.act == "swiglu":
+        p["w_gate"] = lecun_normal(ks[0], (d, f), dtype)
+        p["w_up"] = lecun_normal(ks[1], (d, f), dtype)
+    else:  # gelu MLP (whisper)
+        p["w_up"] = lecun_normal(ks[1], (d, f), dtype)
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    p["w_down"] = lecun_normal(ks[2], (f, d), dtype, fan_in=f)
+    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites:
+        p["zebra_tnet"] = init_token_threshold_net(ks[3], f, f // eff_block_ch(f, cfg))
+    return p
+
+
+def ffn_apply(p, x, cfg: LMConfig, mode: str):
+    cdt = x.dtype
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cdt)) * (x @ p["w_up"].astype(cdt))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(cdt) + p["b_up"].astype(cdt))
+    h = hint_tokens(h, "model")           # hidden map d_ff TP-sharded
+    h, zaux = _zebra_site(h, cfg, p.get("zebra_tnet"), mode)
+    from jax.ad_checkpoint import checkpoint_name
+    h = checkpoint_name(h, "ffn_hidden")  # save_acts remat
+    y = h @ p["w_down"].astype(cdt)
+    if "b_down" in p:
+        y = y + p["b_down"].astype(cdt)
+    return y, zaux
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — top-k routing, sort-based dispatch (MegaBlocks-style, EP-ready)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: LMConfig, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": lecun_normal(ks[0], (d, E), jnp.float32),
+        "w_gate": lecun_normal(ks[1], (E, d, f), dtype),
+        "w_up": lecun_normal(ks[2], (E, d, f), dtype),
+        "w_down": lecun_normal(ks[3], (E, f, d), dtype, fan_in=f),
+    }
+    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites:
+        p["zebra_tnet"] = init_token_threshold_net(ks[4], f, f // eff_block_ch(f, cfg))
+    return p
+
+
+def moe_apply(p, x, cfg: LMConfig, mode: str, local: bool = False):
+    """x: (B, S, d). Sort-based dispatch:
+
+      route -> top-k -> flat (T·k) expert ids -> stable argsort ->
+      rank-in-expert via first-occurrence -> capacity-bounded scatter into
+      (E, C, d) -> per-expert GEMMs (einsum over stacked expert weights;
+      the E axis shards over "model" = expert parallelism) -> gather back.
+
+    Overflow tokens beyond capacity C are dropped (their combine weight is
+    effectively 0 — GShard semantics). Returns (y, zebra_aux, router_aux).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])              # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balancing auxiliary loss (Switch-style) ---
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    router_aux = E * jnp.sum(me * ce)
+
+    cap = int(max(1, round(cfg.capacity_factor * T * k / E)))
+    flat_e = expert_idx.reshape(-1)                              # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(T * k) - first                             # rank in expert
+    dest = jnp.where(rank < cap, sorted_e * cap + rank, E * cap) # overflow slot
+    src_token = order // k
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(xt[src_token])
+    eb = buf[: E * cap].reshape(E, cap, d)
+    if not local:
+        eb = hint(eb, tp_axis(), None, None)  # keep dispatch buffer EP-sharded
+
+    cdt = x.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["w_gate"].astype(cdt))) \
+        * jnp.einsum("ecd,edf->ecf", eb, p["w_up"].astype(cdt))
+    h2d = h.reshape(E * cap, cfg.d_ff)
+    hz, zaux = _zebra_site(h2d[None], cfg, p.get("zebra_tnet"), mode)
+    h = hz[0].reshape(E, cap, cfg.d_ff)
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cdt))
+
+    # gather back: slot for (token, choice) = dest (E*cap = dropped)
+    y_flat = jnp.concatenate([y_e.reshape(E * cap, d),
+                              jnp.zeros((1, d), y_e.dtype)], axis=0)
+    slot_of = jnp.zeros((T * k,), jnp.int32).at[order].set(dest.astype(jnp.int32))
+    per_choice = y_flat[slot_of].reshape(T, k, d)
+    y = jnp.sum(per_choice * gate_vals[..., None].astype(y_e.dtype), axis=1)
+    return y.reshape(B, S, d), zaux, router_aux
+
+
+def moe_apply_dp(p, x, cfg: LMConfig, mode: str, mesh, dp_axes_t: tuple):
+    """Pure-DP MoE (§Perf, small-expert models): shard_map over the batch
+    axes — every device routes/dispatches only its LOCAL tokens against a
+    replicated (FSDP-gathered) expert stack. Zero expert-parallel
+    communication; capacity is per-shard, so the dispatch buffer is
+    1/n_shards the global one."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(p_, x_):
+        y, zaux, raux = moe_apply(p_, x_, cfg, mode, local=True)
+        red = lambda s: _jax.lax.pmean(s, dp_axes_t)
+        reg, zf, nb = zaux
+        return y, red(reg), red(zf), nb, red(raux)
+
+    y, reg, zf, nb, raux = _jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(dp_axes_t, None, None)),
+        out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P()),
+        check_vma=False,
+    )(p, x)
+    return y, (reg, zf, nb), raux

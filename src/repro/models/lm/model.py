@@ -1,0 +1,275 @@
+"""The LM model: embedding + pattern runs (scan-over-layers) + head.
+
+API (all pure functions of params):
+  init(key)                                  -> params
+  forward(params, tokens, mode, enc_feats)   -> (logits, aux)
+  loss(params, tokens, mode, enc_feats)      -> (scalar, metrics)   [chunked CE]
+  init_cache(batch, cache_len)               -> caches
+  prefill(params, tokens, cache_len, ...)    -> (last_logits, caches, aux)
+  decode_step(params, token, caches, pos)    -> (logits, caches)
+
+Encoder-decoder (whisper): ``enc_feats`` is the stub frontend output —
+precomputed frame embeddings (B, enc_seq, d_model); the encoder is a stack
+of non-causal "global" layers; decoder layers carry cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ...distributed.ctx import hint_tokens
+from ..layers import rmsnorm_apply, rmsnorm_init, layernorm_apply, layernorm_init
+from .attention import rope_frequencies
+from .blocks import (apply_layer, apply_layer_decode, apply_layer_prefill,
+                     init_layer, init_layer_cache, zero_aux)
+from .config import LMConfig
+
+
+def layer_runs(cfg: LMConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(superlayer pattern, repeat count)] covering all n_layers."""
+    P = len(cfg.layer_pattern)
+    runs = []
+    g, r = divmod(cfg.n_layers, P)
+    if g:
+        runs.append((tuple(cfg.layer_pattern), g))
+    if r:
+        runs.append((tuple(cfg.layer_pattern[:r]), 1))
+    return runs
+
+
+class LM:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        self.runs = layer_runs(cfg)
+        self.pdt = jnp.dtype(cfg.param_dtype)
+        self.cdt = jnp.dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 1024))
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(next(ks), (cfg.vocab, cfg.d_model),
+                                       self.pdt) * (cfg.d_model ** -0.5),
+            "final_norm": (rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm"
+                           else layernorm_init(cfg.d_model)),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                next(ks), (cfg.d_model, cfg.vocab), self.pdt) * (cfg.d_model ** -0.5)
+        cross = cfg.encoder_layers > 0
+        for ri, (pattern, count) in enumerate(self.runs):
+            def init_super(k, pattern=pattern):
+                sks = jax.random.split(k, len(pattern))
+                return {f"sub{j}": init_layer(sks[j], t, cfg, self.pdt, cross)
+                        for j, t in enumerate(pattern)}
+            if count > 1:
+                params[f"run{ri}"] = jax.vmap(init_super)(
+                    jnp.stack(jax.random.split(next(ks), count)))
+            else:
+                params[f"run{ri}"] = init_super(next(ks))
+        if cross:
+            def init_enc(k):
+                return init_layer(k, "global", cfg, self.pdt, cross=False)
+            params["encoder"] = jax.vmap(init_enc)(
+                jnp.stack(jax.random.split(next(ks), cfg.encoder_layers)))
+            params["enc_norm"] = (rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm"
+                                  else layernorm_init(cfg.d_model))
+        return params
+
+    # ------------------------------------------------------------------
+    def _norm_f(self, p, x):
+        return (rmsnorm_apply(p, x) if self.cfg.norm == "rmsnorm"
+                else layernorm_apply(p, x))
+
+    def _maybe_remat(self, f):
+        if self.cfg.remat == "block":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.nothing_saveable)
+        if self.cfg.remat == "save_acts":
+            # selective remat (§Perf): keep attention outputs + FFN hidden
+            # maps (cheap to store, expensive to recompute); recompute the
+            # rest of the block in backward.
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.save_only_these_names(
+                    "attn_out", "ffn_hidden"))
+        return f
+
+    def _encode(self, params, enc_feats, mode: str):
+        cfg = self.cfg
+        x = enc_feats.astype(self.cdt)
+        rope = rope_frequencies(cfg.head_dim, cfg.rope_theta,
+                                jnp.arange(x.shape[1]))
+
+        def body(carry, lp):
+            x, aux = carry
+            y, a = apply_layer(lp, x, "global", cfg, mode, rope, causal=False)
+            return (y, aux + a), None
+        body = self._maybe_remat(body)
+        (x, aux), _ = jax.lax.scan(body, (x, zero_aux()), params["encoder"],
+                                   unroll=cfg.encoder_layers if cfg.unroll_runs else 1)
+        return self._norm_f(params["enc_norm"], x), aux
+
+    def _backbone(self, params, x, mode: str, enc_out=None):
+        cfg = self.cfg
+        rope = rope_frequencies(cfg.head_dim, cfg.rope_theta,
+                                jnp.arange(x.shape[1]))
+        aux = zero_aux()
+        for ri, (pattern, count) in enumerate(self.runs):
+            rp = params[f"run{ri}"]
+
+            def super_fwd(carry, lp, pattern=pattern):
+                x, aux = carry
+                for j, t in enumerate(pattern):
+                    x, a = apply_layer(lp[f"sub{j}"], x, t, cfg, mode, rope,
+                                       enc_out=enc_out)
+                    aux = aux + a
+                return (x, aux), None
+            super_fwd = self._maybe_remat(super_fwd)
+            if count > 1:
+                (x, aux), _ = jax.lax.scan(super_fwd, (x, aux), rp,
+                                           unroll=count if cfg.unroll_runs else 1)
+            else:
+                (x, aux), _ = super_fwd((x, aux), rp)
+        return x, aux
+
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, mode: str = "train", enc_feats=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.cdt) * (cfg.d_model ** 0.5)
+        x = hint_tokens(x)
+        enc_out, enc_aux = (None, zero_aux())
+        if cfg.encoder_layers and enc_feats is not None:
+            enc_out, enc_aux = self._encode(params, enc_feats, mode)
+        x, aux = self._backbone(params, x, mode, enc_out)
+        x = self._norm_f(params["final_norm"], x)
+        logits = self._project_vocab(params, x)
+        return logits, aux + enc_aux
+
+    def _project_vocab(self, params, x):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"]).astype(self.cdt)
+        return hint_tokens(x @ w, "model")      # logits vocab-sharded
+
+    # ------------------------------------------------------------------
+    def loss(self, params, tokens, mode: str = "train", enc_feats=None):
+        """tokens (B, S+1): next-token CE. ``cfg.ce_chunk`` bounds the
+        logits buffer to (B, chunk, V) — the big-vocab memory lever."""
+        cfg = self.cfg
+        inp, lbl = tokens[:, :-1], tokens[:, 1:]
+        x = params["embed"][inp].astype(self.cdt) * (cfg.d_model ** 0.5)
+        x = hint_tokens(x)
+        enc_out, enc_aux = (None, zero_aux())
+        if cfg.encoder_layers and enc_feats is not None:
+            enc_out, enc_aux = self._encode(params, enc_feats, mode)
+        x, aux = self._backbone(params, x, mode, enc_out)
+        x = self._norm_f(params["final_norm"], x)
+        aux = aux + enc_aux
+        B, S, _ = x.shape
+
+        if cfg.ce_chunk and S % cfg.ce_chunk == 0 and S > cfg.ce_chunk:
+            C = cfg.ce_chunk
+            nc = S // C
+            xc = x.reshape(B, nc, C, -1)
+            lc = lbl.reshape(B, nc, C)
+
+            def ce_chunk(tot, i):
+                logits = self._project_vocab(params, xc[:, i]).astype(jnp.float32)
+                lp = jax.nn.log_softmax(logits, axis=-1)
+                nll = -jnp.take_along_axis(lp, lc[:, i][..., None], axis=-1)
+                return tot + jnp.sum(nll), None
+            ce_chunk = jax.checkpoint(ce_chunk)
+            tot, _ = jax.lax.scan(ce_chunk, jnp.float32(0.0), jnp.arange(nc))
+            ce = tot / (B * S)
+        else:
+            logits = self._project_vocab(params, x).astype(jnp.float32)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            ce = -jnp.mean(jnp.take_along_axis(lp, lbl[..., None], axis=-1))
+
+        zreg, zfnb, nb, raux = aux[0], aux[1], aux[2], aux[3]
+        zero_frac = zfnb / jnp.maximum(nb, 1.0)
+        total = cfg.zebra_t_obj * 0 + ce + zreg   # λ=1 fold; reg already summed
+        if cfg.is_moe:
+            total = total + cfg.router_aux_coef * raux
+        metrics = {"ce": ce, "zebra_reg": zreg, "zero_frac": zero_frac,
+                   "router_aux": raux}
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int):
+        caches = []
+        for pattern, count in self.runs:
+            sub = {f"sub{j}": init_layer_cache(t, self.cfg, batch, cache_len, self.cdt)
+                   for j, t in enumerate(pattern)}
+            if count > 1:
+                sub = jax.tree_util.tree_map(
+                    lambda c: jnp.broadcast_to(c[None], (count,) + c.shape), sub)
+            caches.append(sub)
+        return caches
+
+    def prefill(self, params, tokens, cache_len: int, enc_feats=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.cdt) * (cfg.d_model ** 0.5)
+        enc_out = None
+        if cfg.encoder_layers and enc_feats is not None:
+            enc_out, _ = self._encode(params, enc_feats, "infer")
+        rope = rope_frequencies(cfg.head_dim, cfg.rope_theta,
+                                jnp.arange(x.shape[1]))
+        caches = []
+        aux = zero_aux()
+        for ri, (pattern, count) in enumerate(self.runs):
+            rp = params[f"run{ri}"]
+
+            def super_pf(carry, lp, pattern=pattern):
+                x, aux = carry
+                cs = {}
+                for j, t in enumerate(pattern):
+                    x, c, a = apply_layer_prefill(lp[f"sub{j}"], x, t, cfg, rope,
+                                                  cache_len, enc_out)
+                    cs[f"sub{j}"] = c
+                    aux = aux + a
+                return (x, aux), cs
+            if count > 1:
+                (x, aux), cs = jax.lax.scan(super_pf, (x, aux), rp,
+                                            unroll=count if cfg.unroll_runs else 1)
+            else:
+                (x, aux), cs = super_pf((x, aux), rp)
+            caches.append(cs)
+        x = self._norm_f(params["final_norm"], x[:, -1:])
+        logits = self._project_vocab(params, x)
+        return logits[:, 0], (caches, enc_out), aux
+
+    def decode_step(self, params, token, state, pos):
+        """token (B,1) int32; pos scalar int32. Returns (logits (B,V), state)."""
+        cfg = self.cfg
+        caches, enc_out = state
+        x = params["embed"][token].astype(self.cdt) * (cfg.d_model ** 0.5)
+        rope1 = rope_frequencies(cfg.head_dim, cfg.rope_theta, pos[None])
+        new_caches = []
+        for ri, (pattern, count) in enumerate(self.runs):
+            rp = params[f"run{ri}"]
+            rc = caches[ri]
+
+            def super_dec(x, lp, lc, pattern=pattern):
+                ncs = {}
+                for j, t in enumerate(pattern):
+                    x, c = apply_layer_decode(lp[f"sub{j}"], x, lc[f"sub{j}"], t,
+                                              cfg, pos, rope1, enc_out)
+                    ncs[f"sub{j}"] = c
+                return x, ncs
+            if count > 1:
+                def body(x, pc):
+                    lp, lc = pc
+                    x, nc = super_dec(x, lp, lc)
+                    return x, nc
+                x, ncs = jax.lax.scan(body, x, (rp, rc),
+                                      unroll=count if cfg.unroll_runs else 1)
+            else:
+                x, ncs = super_dec(x, rp, rc)
+            new_caches.append(ncs)
+        x = self._norm_f(params["final_norm"], x)
+        logits = self._project_vocab(params, x)[:, 0]
+        return logits, (new_caches, enc_out)

@@ -1,0 +1,93 @@
+"""Griffin recurrent block with RG-LRU (De et al., arXiv:2402.19427).
+
+Block: x -> [linear -> GeLU] gate branch ∥ [linear -> causal conv1d ->
+RG-LRU] recurrent branch -> ⊙ -> out linear.
+
+RG-LRU:  r_t = σ(W_a u_t + b_a);  i_t = σ(W_x u_t + b_x)
+         log a_t = -c · softplus(Λ) · r_t            (c = 8)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+The sequence recurrence is a first-order linear scan -> associative_scan
+(O(log S) depth, TPU-friendly). Decode is an O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import lecun_normal
+from .config import LMConfig
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: LMConfig, dtype):
+    d, dl = cfg.d_model, cfg.lru_dim
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c in [0.9, 0.999] at r=1 (paper App. A)
+    u = jax.random.uniform(ks[0], (dl,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))                    # softplus^-1
+    return {
+        "w_gate_branch": lecun_normal(ks[1], (d, dl), dtype),
+        "w_rec_branch": lecun_normal(ks[2], (d, dl), dtype),
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, dl), dtype)
+                  * (cfg.conv_width ** -0.5),
+        "w_a": lecun_normal(ks[4], (dl, dl), dtype),
+        "b_a": jnp.zeros((dl,), jnp.float32),
+        "w_x": lecun_normal(ks[5], (dl, dl), dtype),
+        "b_x": jnp.zeros((dl,), jnp.float32),
+        "lam": lam,
+        "w_out": lecun_normal(ks[0], (dl, d), dtype, fan_in=dl),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_a"].astype(u.dtype) + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_x"].astype(u.dtype) + p["b_x"].astype(u.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"])[None] * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv1d(x, w):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + pad[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return y
+
+
+def rglru_apply(p, x, cfg: LMConfig):
+    """x (B,S,d) -> (B,S,d). Full-sequence (training / prefill) path."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype))
+    u = _causal_conv1d(x @ p["w_rec_branch"].astype(x.dtype),
+                       p["conv_w"].astype(x.dtype))
+    a, b = _gates(p, u)                                           # (B,S,dl) fp32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    return y
+
+
+def rglru_init_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    dl = cfg.lru_dim
+    return {"h": jnp.zeros((batch, dl), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, dl), dtype)}
+
+
+def rglru_decode_step(p, x, cache, cfg: LMConfig):
+    """x (B,1,d) -> (y (B,1,d), cache). O(1)."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype))
+    u_in = x @ p["w_rec_branch"].astype(x.dtype)                  # (B,1,dl)
+    hist = jnp.concatenate([cache["conv"], u_in], axis=1)
+    u = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(x.dtype))[:, None]
+    a, b = _gates(p, u)                                           # (B,1,dl)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    return y, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,189 @@
+"""Mamba-2 / SSD block (Dao & Gu, arXiv:2405.21060) — chunked matmul form.
+
+State-space duality: y_t = Σ_{s≤t} C_t·(Π_{r∈(s,t]} e^{A·dt_r})·B_s·dt_s·x_s
++ D·x_t, computed as (intra-chunk quadratic) + (inter-chunk state scan), so
+everything is MXU-shaped matmuls except one tiny per-chunk scan. ngroups=1.
+
+Projections are kept *separate* (z, x, B, C, dt) rather than packed, so
+tensor parallelism shards the head/d_inner axis cleanly (z/x/dt over
+"model"; B/C are per-group states, replicated) — the packed-matrix slicing
+of the reference CUDA impl does not transfer to SPMD sharding
+(DESIGN.md §2 hardware-adaptation note).
+
+Block: separate in-projections; causal conv1d(width w) + silu on x, B, C;
+SSD over heads; y ⊙ silu(z); RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import lecun_normal, rmsnorm_apply, rmsnorm_init
+from .config import LMConfig
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B,S,C), w (W,C) depthwise causal: y[t] = Σ_i w[i]·x[t-W+1+i]."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + pad[:, i:i + x.shape[1]] * w[i][None, None, :]
+    return y
+
+
+def _segsum(dtA: jax.Array) -> jax.Array:
+    """dtA (..., Q) -> L (..., Q, Q): L[i,j] = Σ_{j<r<=i} dtA[r], -inf j>i."""
+    Q = dtA.shape[-1]
+    cs = jnp.cumsum(dtA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                    # i,j
+    ok = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(ok, diff, -jnp.inf)
+
+
+def ssm_init(key, cfg: LMConfig, dtype):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    cw = cfg.conv_width
+    return {
+        "z_proj": lecun_normal(ks[0], (d, di), dtype),
+        "x_proj": lecun_normal(ks[1], (d, di), dtype),
+        "b_proj": lecun_normal(ks[2], (d, ds), dtype),
+        "c_proj": lecun_normal(ks[3], (d, ds), dtype),
+        "dt_proj": lecun_normal(ks[4], (d, nh), dtype),
+        "conv_x": jax.random.normal(ks[5], (cw, di), dtype) * (cw ** -0.5),
+        "conv_b": jax.random.normal(ks[6], (cw, ds), dtype) * (cw ** -0.5),
+        "conv_c": jax.random.normal(ks[7], (cw, ds), dtype) * (cw ** -0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),                   # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),            # softplus ~ 0.12
+        "out_norm": rmsnorm_init(di, jnp.float32),
+        "out_proj": lecun_normal(ks[0], (di, d), dtype, fan_in=di),
+    }
+
+
+def _projections(p, h):
+    z = h @ p["z_proj"].astype(h.dtype)
+    x = h @ p["x_proj"].astype(h.dtype)
+    Bm = h @ p["b_proj"].astype(h.dtype)
+    Cm = h @ p["c_proj"].astype(h.dtype)
+    dt = h @ p["dt_proj"].astype(h.dtype)
+    return z, x, Bm, Cm, dt
+
+
+def ssm_apply(p, hidden, cfg: LMConfig):
+    """hidden (B,S,d) -> (B,S,d). Chunked SSD."""
+    B, S, d = hidden.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:                    # largest chunk <= cfg.ssm_chunk dividing S
+        Q -= 1
+    nc = S // Q
+    z, xr, Bm, Cm, dt = _projections(p, hidden)
+    xr = jax.nn.silu(_causal_conv1d(xr, p["conv_x"].astype(xr.dtype)))
+    Bm = jax.nn.silu(_causal_conv1d(Bm, p["conv_b"].astype(Bm.dtype)))
+    Cm = jax.nn.silu(_causal_conv1d(Cm, p["conv_c"].astype(Cm.dtype)))
+    xs = xr.reshape(B, S, nh, hd)
+    A = -jnp.exp(p["A_log"])                                      # (nh,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+
+    # chunk views
+    xc = xs.reshape(B, nc, Q, nh, hd)
+    dtc = dt.reshape(B, nc, Q, nh)
+    Bc = Bm.reshape(B, nc, Q, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, ds).astype(jnp.float32)
+    dtA = dtc * A[None, None, None, :]                            # (B,nc,Q,nh)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+
+    # --- intra-chunk (quadratic within Q) ---
+    L = jnp.exp(_segsum(jnp.moveaxis(dtA, -1, -2)))               # (B,nc,nh,Q,Q)
+    G = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)                     # (B,nc,Q,Q)
+    M = G[:, :, None] * L                                         # (B,nc,nh,Q,Q)
+    Yd = jnp.einsum("bnhij,bnjhp->bnihp", M, xdt)
+
+    # --- chunk states + inter-chunk recurrence ---
+    cs = jnp.cumsum(dtA, axis=2)                                  # (B,nc,Q,nh)
+    to_end = jnp.exp(cs[:, :, -1:, :] - cs)                       # decay j..end
+    St = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", Bc, to_end, xdt)    # (B,nc,nh,ds,hd)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                        # (B,nc,nh)
+
+    def step(H, inp):
+        St_n, dec_n = inp
+        H_new = H * dec_n[..., None, None] + St_n
+        return H_new, H                                           # emit H_prev
+    H0 = jnp.zeros((B, nh, ds, hd), jnp.float32)
+    _, Hprev = jax.lax.scan(step, H0,
+                            (jnp.moveaxis(St, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    Hprev = jnp.moveaxis(Hprev, 0, 1)                             # (B,nc,nh,ds,hd)
+    in_decay = jnp.exp(cs)                                        # decay start..i
+    Yo = jnp.einsum("bnis,bnhsp,bnih->bnihp", Cc, Hprev, in_decay)
+
+    y = (Yd + Yo).reshape(B, S, nh, hd) + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(hidden.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(p["out_norm"], y)
+    return y @ p["out_proj"].astype(hidden.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def ssm_init_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.conv_width - 1
+    return {"H": jnp.zeros((batch, nh, ds, hd), jnp.float32),
+            "conv_x": jnp.zeros((batch, w, di), dtype),
+            "conv_b": jnp.zeros((batch, w, ds), dtype),
+            "conv_c": jnp.zeros((batch, w, ds), dtype)}
+
+
+def _conv_step(cache_buf, new, w):
+    hist = jnp.concatenate([cache_buf, new], axis=1)              # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", hist, w)
+    return out, hist[:, 1:]
+
+
+def ssm_decode_step(p, hidden, cache, cfg: LMConfig):
+    """hidden (B,1,d) -> (y (B,1,d), new cache). O(1) recurrent update."""
+    B = hidden.shape[0]
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, Bm, Cm, dt = _projections(p, hidden)                   # (B,1,·)
+    cdt = hidden.dtype
+    xo, cx = _conv_step(cache["conv_x"], xr, p["conv_x"].astype(cdt))
+    bo, cb = _conv_step(cache["conv_b"], Bm, p["conv_b"].astype(cdt))
+    co, cc = _conv_step(cache["conv_c"], Cm, p["conv_c"].astype(cdt))
+    xs = jax.nn.silu(xo).reshape(B, nh, hd).astype(jnp.float32)
+    Bv = jax.nn.silu(bo).astype(jnp.float32)
+    Cv = jax.nn.silu(co).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    decay = jnp.exp(dt1 * A[None, :])
+    H = cache["H"] * decay[..., None, None] + jnp.einsum(
+        "bs,bh,bhp->bhsp", Bv, dt1, xs)
+    y = jnp.einsum("bs,bhsp->bhp", Cv, H) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(cdt)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(p["out_norm"], y)
+    return y @ p["out_proj"].astype(cdt), {"H": H, "conv_x": cx,
+                                           "conv_b": cb, "conv_c": cc}
+
+
+def ssm_prefill_state(p, hidden, cfg: LMConfig):
+    """Final SSD state after consuming hidden (B,S,d) — replays only the
+    inter-chunk recurrence (matmul-light)."""
+    B, S, _ = hidden.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    _, xr_pre, Bm_pre, Cm_pre, dt = _projections(p, hidden)
+    xr = jax.nn.silu(_causal_conv1d(xr_pre, p["conv_x"].astype(hidden.dtype)))
+    Bm = jax.nn.silu(_causal_conv1d(Bm_pre, p["conv_b"].astype(hidden.dtype)))
+    xs = xr.reshape(B, S, nh, hd).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dtA = dtv * A[None, None, :]
+    cs = jnp.cumsum(dtA, axis=1)
+    to_end = jnp.exp(cs[:, -1:, :] - cs)
+    H = jnp.einsum("bjs,bjh,bjhp->bhsp", Bm.astype(jnp.float32), to_end * dtv, xs)
+    w = cfg.conv_width - 1
+    return {"H": H, "conv_x": xr_pre[:, -w:], "conv_b": Bm_pre[:, -w:],
+            "conv_c": Cm_pre[:, -w:]}

@@ -1,0 +1,9 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    sgd,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+)
+from .schedule import step_decay, cosine, warmup_cosine, constant  # noqa: F401
+from .compress import compressed_gradients, CompressionState  # noqa: F401

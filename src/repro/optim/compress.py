@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick, DESIGN.md §5).
+
+Two modes:
+  * bf16: cast gradients to bfloat16 before the all-reduce (2x wire bytes),
+    accumulate in fp32 — the standard large-scale trick; error-free enough
+    in practice and stateless.
+  * int8 + error feedback: per-tensor max-abs scaling to int8 (4x), with the
+    quantization residual carried to the next step (1-bit-Adam-style error
+    feedback) so the compression bias vanishes over time.
+
+Use: wrap the grads *before* jax.lax.pmean / psum / the implicit jit
+all-reduce; under jit+NamedSharding the cast shrinks the reduce-scatter /
+all-gather payload the SPMD partitioner emits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import PyTree
+
+
+class CompressionState(NamedTuple):
+    error: PyTree | None     # residual carried between steps (int8 mode)
+
+
+def init_state(params: PyTree, mode: str = "bf16") -> CompressionState:
+    if mode == "int8":
+        err = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return CompressionState(error=err)
+    return CompressionState(error=None)
+
+
+def compressed_gradients(grads: PyTree, state: CompressionState, mode: str = "bf16"
+                         ) -> tuple[PyTree, CompressionState]:
+    """Returns (wire-format grads decoded back to fp32, new state).
+
+    The encode->decode round trip is applied *before* the collective so the
+    collective payload is the compressed dtype; XLA moves the converts
+    across the all-reduce when profitable.
+    """
+    if mode == "none":
+        return grads, state
+    if mode == "bf16":
+        dec = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        return dec, state
+
+    if mode == "int8":
+        def enc_dec(g, e):
+            g = g.astype(jnp.float32) + e            # add carried residual
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            dec = q.astype(jnp.float32) * scale
+            return dec, g - dec                       # new residual
+        flat = jax.tree_util.tree_map(enc_dec, grads, state.error)
+        dec = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return dec, CompressionState(error=err)
+    raise ValueError(f"unknown compression mode {mode!r}")

@@ -1,0 +1,82 @@
+"""Optimizers (pytree-functional, shardable: state mirrors param sharding).
+
+The paper trains with "standard SGD optimizer with learning rate step decay
+from 0.1 to 0.001" + weight decay; the LM side uses AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import PyTree, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]   # (grads, state, params, step)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr_fn: Callable[[jax.Array], jax.Array], momentum: float = 0.9,
+        weight_decay: float = 5e-4, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            mu_n = momentum * mu + g
+            d = (g + momentum * mu_n) if nesterov else mu_n
+            return -lr * d, mu_n
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn: Callable[[jax.Array], jax.Array], b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_n = b1 * m + (1 - b1) * g
+            v_n = b2 * v + (1 - b2) * jnp.square(g)
+            upd = m_n / c1 / (jnp.sqrt(v_n / c2) + eps)
+            return -lr * (upd + weight_decay * p.astype(jnp.float32)), m_n, v_n
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init, update)

@@ -1,0 +1,38 @@
+"""LR schedules. Paper: "standard SGD with learning rate step decay from
+0.1 to 0.001"."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(base_lr: float = 0.1, boundaries=(0.5, 0.75), total_steps: int = 1000,
+               factor: float = 0.1):
+    """0.1 -> 0.01 -> 0.001 at the given fraction boundaries (paper setting)."""
+    bs = [int(b * total_steps) for b in boundaries]
+
+    def fn(step):
+        lr = jnp.float32(base_lr)
+        for b in bs:
+            lr = jnp.where(step >= b, lr * factor, lr)
+        return lr
+    return fn
+
+
+def cosine(base_lr: float, total_steps: int, min_frac: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.float32(base_lr) * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1):
+    cos = cosine(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def fn(step):
+        w = jnp.float32(base_lr) * jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, w, cos(step - warmup))
+    return fn

@@ -1,0 +1,1 @@
+from .cnn_trainer import CNNTrainer, CNNTrainConfig  # noqa: F401

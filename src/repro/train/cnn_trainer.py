@@ -1,0 +1,159 @@
+"""CNN training loop — the paper's experimental pipeline (§III).
+
+Loss assembly (paper Eq. 1 + partner methods):
+    L = λ·CE + Σ_{l,c} ||T_obj − T_{l,c}||²  (+ ρ_NS·Σ|γ|  during NS
+    sparsity-training)  with WP / NS masks held fixed during retrain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (ZebraConfig, collect_zebra_loss, mean_zero_frac,
+                    reduced_bandwidth_pct, slimming, weight_pruning)
+from ..data import ImageDatasetConfig, StreamingLoader, image_batch
+from ..models.cnn import build as build_cnn
+from ..models.cnn.common import accuracy, cross_entropy, topk_accuracy
+from ..optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNTrainConfig:
+    model: str = "resnet18"
+    width_mult: float = 1.0
+    dataset: ImageDatasetConfig = ImageDatasetConfig()
+    batch: int = 64
+    steps: int = 300
+    zebra: ZebraConfig = ZebraConfig()
+    ns_rho: float = 0.0            # BN-γ L1 weight (NS sparsity training)
+    grad_clip: float = 10.0
+    seed: int = 0
+
+
+class CNNTrainer:
+    def __init__(self, cfg: CNNTrainConfig, optimizer: Optimizer):
+        self.cfg = cfg
+        self.model = build_cnn(cfg.model, cfg.dataset.num_classes,
+                               cfg.dataset.hw, cfg.width_mult)
+        self.opt = optimizer
+        self.wp_masks = None       # magnitude weight-pruning masks (fixed)
+        self.ns_masks = None       # network-slimming channel masks (fixed)
+        self._train_step = jax.jit(self._step, static_argnames=("train",))
+        self._eval_step = jax.jit(self._eval)
+
+    # ------------------------------------------------------------------
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        variables = self.model.init(key, self.cfg.zebra)
+        opt_state = self.opt.init(self._trainable(variables))
+        return {"variables": variables, "opt": opt_state,
+                "step": jnp.int32(0)}
+
+    def _trainable(self, variables):
+        return {"params": variables["params"], "zebra": variables["zebra"]}
+
+    # ------------------------------------------------------------------
+    def _loss_fn(self, trainable, state_bn, images, labels, train: bool):
+        variables = {"params": trainable["params"], "state": state_bn,
+                     "zebra": trainable["zebra"]}
+        zcfg = self.cfg.zebra.replace(mode="train" if train else "infer")
+        logits, new_bn, auxes = self.model.apply(variables, images, train, zcfg)
+        ce = cross_entropy(logits, labels)
+        zreg = collect_zebra_loss(auxes)
+        loss = self.cfg.zebra.lambda_ce * ce + zreg
+        if self.cfg.ns_rho > 0:
+            loss = loss + self.cfg.ns_rho * slimming.gamma_l1(trainable["params"])
+        metrics = {"ce": ce, "zebra_reg": zreg,
+                   "acc": accuracy(logits, labels),
+                   "zero_frac": mean_zero_frac(auxes)}
+        return loss, (new_bn, metrics, auxes)
+
+    def _apply_fixed_masks(self, trainable):
+        if self.wp_masks is not None:
+            trainable = dict(trainable)
+            trainable["params"] = weight_pruning.apply_masks(
+                trainable["params"], self.wp_masks)
+        if self.ns_masks is not None:
+            trainable = dict(trainable)
+            trainable["params"] = slimming.apply_masks(
+                trainable["params"], self.ns_masks)
+        return trainable
+
+    def _step(self, state, images, labels, train: bool = True):
+        trainable = self._apply_fixed_masks(self._trainable(state["variables"]))
+        grad_fn = jax.value_and_grad(self._loss_fn, has_aux=True)
+        (loss, (new_bn, metrics, _)), grads = grad_fn(
+            trainable, state["variables"]["state"], images, labels, train)
+        grads, gnorm = clip_by_global_norm(grads, self.cfg.grad_clip)
+        updates, new_opt = self.opt.update(grads, state["opt"], trainable,
+                                           state["step"])
+        new_trainable = apply_updates(trainable, updates)
+        new_trainable = self._apply_fixed_masks(new_trainable)
+        new_vars = {"params": new_trainable["params"], "state": new_bn,
+                    "zebra": new_trainable["zebra"]}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"variables": new_vars, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    def _eval(self, variables, images, labels):
+        zcfg = self.cfg.zebra.replace(mode="infer")
+        logits, _, auxes = self.model.apply(variables, images, False, zcfg)
+        return {"acc": accuracy(logits, labels),
+                "top5": topk_accuracy(logits, labels, k=5),
+                "ce": cross_entropy(logits, labels),
+                "zero_frac": mean_zero_frac(auxes),
+                "zero_fracs": jnp.stack([a["zero_frac"] for a in auxes])}
+
+    # ------------------------------------------------------------------
+    def train(self, steps: int | None = None, log_every: int = 50,
+              loader: StreamingLoader | None = None, state=None,
+              callback: Callable | None = None):
+        cfg = self.cfg
+        steps = steps or cfg.steps
+        loader = loader or StreamingLoader(
+            partial(image_batch, cfg.dataset), cfg.batch)
+        state = state or self.init_state()
+        history = []
+        for _ in range(steps):
+            images, labels = next(loader)
+            state, metrics = self._train_step(state, images, labels)
+            if int(state["step"]) % log_every == 0 or int(state["step"]) == steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = int(state["step"])
+                history.append(m)
+                if callback:
+                    callback(m)
+        return state, history
+
+    # ------------------------------------------------------------------
+    def evaluate(self, variables, batches: int = 8, batch: int = 128, seed: int = 10_000):
+        cfg = self.cfg
+        accs, top5s, zfs, per_site = [], [], [], []
+        for i in range(batches):
+            images, labels = image_batch(cfg.dataset, batch, seed + i)
+            out = self._eval_step(variables, images, labels)
+            accs.append(float(out["acc"]))
+            top5s.append(float(out["top5"]))
+            zfs.append(float(out["zero_frac"]))
+            per_site.append(np.asarray(out["zero_fracs"]))
+        specs = self.model.map_specs(cfg.dataset.hw, cfg.zebra)
+        site_zf = np.mean(np.stack(per_site), axis=0)
+        bw = reduced_bandwidth_pct(specs, list(site_zf))
+        return {"acc": float(np.mean(accs)), "top5": float(np.mean(top5s)),
+                "zero_frac": float(np.mean(zfs)), "reduced_bandwidth_pct": bw,
+                "site_zero_fracs": site_zf}
+
+    # ------------------------------------------------------------------
+    # Partner-method hooks (paper §III.A)
+    def apply_weight_pruning(self, variables, prune_frac: float):
+        self.wp_masks = weight_pruning.magnitude_masks(variables["params"], prune_frac)
+        return weight_pruning.sparsity(self.wp_masks)
+
+    def apply_network_slimming(self, variables, prune_frac: float):
+        self.ns_masks = slimming.channel_masks(variables["params"], prune_frac)
+        return slimming.pruned_channel_frac(self.ns_masks)

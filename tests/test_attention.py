@@ -1,0 +1,99 @@
+"""Attention paths agree with the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import attention as A
+
+K = jax.random.PRNGKey(0)
+
+
+def qkv(B=2, S=128, Hq=8, Hkv=2, hd=32, key=K):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    return q, k, v
+
+
+def test_chunked_matches_full_causal():
+    q, k, v = qkv()
+    o_full = A.attend_full(q, k, v, causal=True)
+    o_chunk = A.attend_chunked(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_chunk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_matches_full_bidirectional():
+    q, k, v = qkv()
+    o_full = A.attend_full(q, k, v, causal=False)
+    o_chunk = A.attend_chunked(q, k, v, causal=False, chunk=64)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_chunk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_local_matches_full_window_mask():
+    q, k, v = qkv(S=128)
+    W = 32
+    o_full = A.attend_full(q, k, v, causal=True, window=W)
+    o_loc = A.attend_local(q, k, v, window=W)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_loc),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_grad_finite():
+    q, k, v = qkv(S=64)
+
+    def loss(q):
+        return jnp.sum(A.attend_chunked(q, k, v, causal=True, chunk=16) ** 2)
+    g = jax.grad(loss)(q)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_decode_matches_full_last_position():
+    q, k, v = qkv(S=64)
+    o_full = A.attend_full(q, k, v, causal=True)
+    o_dec = A.attend_decode(q[:, -1:], k, v, pos=63)
+    np.testing.assert_allclose(np.asarray(o_full[:, -1:]), np.asarray(o_dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_windowed_ring():
+    """Ring-buffer local decode == full attention restricted to window."""
+    B, S, Hq, Hkv, hd, W = 1, 96, 4, 2, 16, 32
+    q, k, v = qkv(B, S, Hq, Hkv, hd)
+    # build ring cache holding the last W keys at pos = S-1
+    pos = S - 1
+    ring_idx = (jnp.arange(pos - W + 1, pos + 1)) % W
+    kc = jnp.zeros((B, W, Hkv, hd)).at[:, ring_idx].set(k[:, pos - W + 1: pos + 1])
+    vc = jnp.zeros((B, W, Hkv, hd)).at[:, ring_idx].set(v[:, pos - W + 1: pos + 1])
+    o_dec = A.attend_decode(q[:, -1:], kc, vc, pos, window=W)
+    o_full = A.attend_full(q, k, v, causal=True, window=W)[:, -1:]
+    np.testing.assert_allclose(np.asarray(o_dec), np.asarray(o_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(K, (2, 16, 4, 32))
+    cos, sin = A.rope_frequencies(32, 10_000.0, jnp.arange(16))
+    y = A.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    hd = 64
+    q = jax.random.normal(K, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot_at(m, n):
+        cm, sm = A.rope_frequencies(hd, 1e4, jnp.array([m]))
+        cn, sn = A.rope_frequencies(hd, 1e4, jnp.array([n]))
+        qq = A.apply_rope(q, cm, sm)
+        kk = A.apply_rope(k, cn, sn)
+        return float(jnp.sum(qq * kk))
+    assert np.isclose(dot_at(5, 3), dot_at(10, 8), rtol=1e-4)
+    assert np.isclose(dot_at(7, 0), dot_at(107, 100), rtol=1e-4)

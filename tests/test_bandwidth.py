@@ -1,0 +1,59 @@
+"""Bandwidth accounting — paper Eq. (2)-(5) and Table V scale checks."""
+import numpy as np
+
+from repro.core import (MapSpec, TokenMapSpec, stored_bits, conv_flops,
+                        reduced_bandwidth_pct, index_overhead_pct,
+                        required_bandwidth_bytes, zebra_overhead_flops,
+                        overhead_ratio)
+from repro.models.cnn import build as build_cnn
+
+
+def test_eq2_eq3():
+    s = MapSpec(c=64, h=32, w=32, bits=16, block=4)
+    assert s.map_bits == 64 * 32 * 32 * 16
+    assert s.index_bits == 64 * 32 * 32 // 16          # Eq. 3
+    # Eq. 2 at 50% reduction
+    assert stored_bits(s, 0.5) == s.map_bits * 0.5 + s.index_bits
+
+
+def test_index_overhead_magnitude():
+    """Paper Table V: index overhead is fractions of a percent (1 bit per
+    block of block^2 elements of B bits)."""
+    s = MapSpec(c=64, h=32, w=32, bits=16, block=4)
+    pct = index_overhead_pct([s])
+    assert np.isclose(pct, 100.0 / (16 * 16))          # 1/(b^2 * B)
+    assert pct < 1.0
+
+
+def test_reduced_bandwidth_net_of_overhead():
+    s = MapSpec(c=8, h=8, w=8, bits=16, block=4)
+    # zero reduction -> negative saving equal to index overhead
+    assert reduced_bandwidth_pct([s], [0.0]) < 0
+    assert reduced_bandwidth_pct([s], [1.0]) > 99.0
+
+
+def test_eq4_eq5_overhead_negligible():
+    # Eq. 4 vs Eq. 5 for a typical conv layer
+    r = overhead_ratio(c_in=128, h=16, w=16, k=3, c_out=128, stride=1)
+    assert r == zebra_overhead_flops(128, 16, 16) / conv_flops(128, 16, 16, 3, 128)
+    assert r < 1e-2                                     # "totally negligible"
+
+
+def test_resnet18_required_bandwidth_scale():
+    """Table V: ResNet-18 on CIFAR-10 required bandwidth ~ 2.06 MB/image at
+    8-bit activations. Our CIFAR ResNet-18 map inventory should land in the
+    same ballpark (architectural variants differ slightly)."""
+    model = build_cnn("resnet18", 10, 32)
+    from repro.core import ZebraConfig
+    specs = model.map_specs(32, ZebraConfig(act_bits=8, block_hw=4))
+    mb = required_bandwidth_bytes(specs) / 2 ** 20
+    # paper reports 2.06 MB for its variant; our CIFAR-stem inventory is
+    # self-consistent at ~0.5 MB — same order of magnitude
+    assert 0.2 < mb < 4.0, mb
+    assert index_overhead_pct(specs) < 1.0              # Table V: ~0.2%
+
+
+def test_token_map_spec():
+    s = TokenMapSpec(s=4096, d=8192, bits=16, block_seq=8, block_ch=128)
+    assert s.n_blocks == (4096 // 8) * (8192 // 128)
+    assert s.index_bits == s.n_blocks

@@ -1,0 +1,81 @@
+"""CNN zoo smoke tests + Network Slimming + Weight Pruning units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ZebraConfig, slimming, weight_pruning
+from repro.models.cnn import build as build_cnn
+
+K = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet18", "resnet56", "mobilenet"])
+def test_cnn_forward_shapes_no_nan(name):
+    model = build_cnn(name, num_classes=10, in_hw=32, width_mult=0.125)
+    zcfg = ZebraConfig(t_obj=0.1)
+    variables = model.init(K, zcfg)
+    x = jax.random.normal(K, (2, 3, 32, 32))
+    logits, new_state, auxes = model.apply(variables, x, True, zcfg)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert len(auxes) > 5
+    # eval path with constant-threshold Zebra
+    logits2, _, auxes2 = model.apply(variables, x, False, zcfg.replace(mode="infer"))
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("name", ["resnet18", "vgg16", "mobilenet"])
+def test_map_specs_match_apply(name):
+    """map_specs (bandwidth accounting) must agree with the real site count
+    and block counts seen during apply."""
+    model = build_cnn(name, num_classes=10, in_hw=32, width_mult=0.25)
+    zcfg = ZebraConfig(t_obj=0.1)
+    variables = model.init(K, zcfg)
+    x = jax.random.normal(K, (1, 3, 32, 32))
+    _, _, auxes = model.apply(variables, x, False, zcfg.replace(mode="infer"))
+    specs = model.map_specs(32, zcfg)
+    assert len(specs) == len(auxes)
+    for spec, aux in zip(specs, auxes):
+        assert spec.n_blocks == aux["n_blocks"], (spec, aux["n_blocks"])
+
+
+def test_weight_pruning_sparsity():
+    model = build_cnn("resnet18", 10, 32, 0.125)
+    variables = model.init(K, ZebraConfig())
+    masks = weight_pruning.magnitude_masks(variables["params"], 0.5)
+    sp = weight_pruning.sparsity(masks)
+    assert 0.45 < sp < 0.55
+    pruned = weight_pruning.apply_masks(variables["params"], masks)
+    w = pruned["s0b0"]["conv1"]["w"]
+    assert float(jnp.mean((w == 0).astype(jnp.float32))) > 0.4
+
+
+def test_network_slimming_masks():
+    model = build_cnn("vgg16", 10, 32, 0.125)
+    variables = model.init(K, ZebraConfig())
+    # randomize gammas so a quantile exists
+    params = jax.tree_util.tree_map(lambda x: x, variables["params"])
+    gammas = slimming.collect_gammas(params)
+    assert len(gammas) == 13           # one BN per conv in VGG16
+    key = K
+    def randomize(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if any(n.startswith("bn") for n in names) and str(names[-1]) == "scale":
+            return jax.random.uniform(jax.random.PRNGKey(hash(tuple(names)) % 2**31), leaf.shape)
+        return leaf
+    params = jax.tree_util.tree_map_with_path(randomize, params)
+    masks = slimming.channel_masks(params, 0.3)
+    frac = slimming.pruned_channel_frac(masks)
+    assert 0.2 < frac < 0.4
+    slim = slimming.apply_masks(params, masks)
+    g2 = slimming.collect_gammas(slim)
+    zeroed = sum(float(jnp.sum(g == 0)) for _, g in g2)
+    total = sum(int(g.size) for _, g in g2)
+    assert np.isclose(zeroed / total, frac, atol=0.02)
+
+
+def test_gamma_l1_positive():
+    model = build_cnn("resnet18", 10, 32, 0.125)
+    variables = model.init(K, ZebraConfig())
+    assert float(slimming.gamma_l1(variables["params"])) > 0

@@ -1,0 +1,85 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden
+from repro.kernels import ref
+
+K = jax.random.PRNGKey(0)
+
+
+def _blocky(key, M, Kd, bs, bc, live_p=0.5, dtype=jnp.float32):
+    """Activations with genuine zero-block structure (>=1 live, >=1 dead)."""
+    x = jax.random.normal(key, (M, Kd), jnp.float32)
+    scale = (jax.random.uniform(jax.random.PRNGKey(7), (M // bs, Kd // bc))
+             < live_p).astype(jnp.float32)
+    scale = scale.at[0, 0].set(1.0)            # force one live block
+    if scale.size > 1:
+        scale = scale.reshape(-1).at[-1].set(0.0).reshape(scale.shape)
+    x = x * jnp.repeat(jnp.repeat(scale, bs, 0), bc, 1) * 2.0 + x * 0.01
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("M,Kd,bs,bc", [
+    (16, 128, 8, 128), (64, 512, 8, 128), (128, 256, 16, 64),
+    (256, 1024, 8, 256), (24, 384, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_zebra_mask_sweep(M, Kd, bs, bc, dtype):
+    x = _blocky(K, M, Kd, bs, bc, dtype=dtype)
+    y, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    yr, bmr = ref.zebra_mask_ref(x, 0.5, bs, bc)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(bmr))
+    assert 0.0 < 1 - np.mean(np.asarray(bmr)) < 1.0   # sparsity exercised
+
+
+@pytest.mark.parametrize("M,Kd,N", [(16, 256, 128), (64, 512, 256), (32, 384, 64)])
+def test_zebra_spmm_sweep(M, Kd, N):
+    bs, bc = 8, 128
+    x = _blocky(K, M, Kd, bs, bc)
+    w = jax.random.normal(jax.random.PRNGKey(1), (Kd, N), jnp.float32)
+    _, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    y = zebra_spmm_op(x, w, bm, bs=bs, bc=bc)
+    yr = ref.zebra_spmm_ref(x, w, np.asarray(bm), bs, bc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_ffn_hidden():
+    x = _blocky(K, 64, 512, 8, 128)
+    w = jax.random.normal(jax.random.PRNGKey(2), (512, 128), jnp.float32)
+    y, bm = zebra_ffn_hidden(x, w, 0.5)
+    yr, bmr = ref.zebra_mask_then_spmm_ref(x, w, 0.5, 8, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(bmr))
+
+
+def test_spmm_skips_dead_blocks_exactly():
+    """A dead block's x values must not leak into the product even if the
+    raw (pre-mask) x is nonzero there."""
+    bs, bc = 8, 128
+    x = jnp.ones((16, 256), jnp.float32) * 0.01       # all below threshold
+    x = x.at[:8, :128].set(5.0)                       # one live block
+    w = jnp.ones((256, 64), jnp.float32)
+    _, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    assert int(np.asarray(bm).sum()) == 1
+    y = zebra_spmm_op(x, w, bm, bs=bs, bc=bc)
+    np.testing.assert_allclose(np.asarray(y[:8]), 5.0 * 128, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y[8:]), 0.0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), live=st.floats(0.1, 0.9))
+def test_property_mask_then_spmm_equals_dense_masked(seed, live):
+    bs, bc = 8, 128
+    x = _blocky(jax.random.PRNGKey(seed), 32, 256, bs, bc, live)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (256, 32), jnp.float32)
+    y, _ = zebra_ffn_hidden(x, w, 0.5)
+    ymask, _ = ref.zebra_mask_ref(x, 0.5, bs, bc)
+    dense = np.asarray(ymask, np.float32) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y), dense, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD and RG-LRU vs naive sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm import ssm as S
+from repro.models.lm import rglru as R
+
+K = jax.random.PRNGKey(0)
+
+CFG = LMConfig(name="t", d_model=32, n_layers=1, layer_pattern=("ssm",),
+               d_ff=0, vocab=64, ssm_state=8, ssm_head_dim=8, ssm_expand=2,
+               ssm_chunk=8, head_dim=8, zebra_enabled=False)
+
+
+def naive_ssd(p, hidden, cfg):
+    """Sequential reference: h_t = h_{t-1} * exp(dt A) + dt B x; y = C h + Dx."""
+    B, Sq, d = hidden.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, Bm, Cm, dt = S._projections(p, hidden)
+    xr = jax.nn.silu(S._causal_conv1d(xr, p["conv_x"]))
+    Bm = jax.nn.silu(S._causal_conv1d(Bm, p["conv_b"]))
+    Cm = jax.nn.silu(S._causal_conv1d(Cm, p["conv_c"]))
+    xs = np.asarray(xr.reshape(B, Sq, nh, hd), np.float64)
+    Bn = np.asarray(Bm, np.float64)
+    Cn = np.asarray(Cm, np.float64)
+    A = -np.exp(np.asarray(p["A_log"], np.float64))
+    dtv = np.log1p(np.exp(np.asarray(dt, np.float64) + np.asarray(p["dt_bias"], np.float64)))
+    H = np.zeros((B, nh, ds, hd))
+    ys = np.zeros((B, Sq, nh, hd))
+    for t in range(Sq):
+        decay = np.exp(dtv[:, t] * A[None, :])                    # (B,nh)
+        H = H * decay[..., None, None] + np.einsum(
+            "bs,bh,bhp->bhsp", Bn[:, t], dtv[:, t], xs[:, t])
+        ys[:, t] = np.einsum("bs,bhsp->bhp", Cn[:, t], H) \
+            + np.asarray(p["D"])[None, :, None] * xs[:, t]
+    y = ys.reshape(B, Sq, di)
+    y = y * np.asarray(jax.nn.silu(z), np.float64)
+    from repro.models.layers import rmsnorm_apply
+    y = np.asarray(rmsnorm_apply(p["out_norm"], jnp.asarray(y, jnp.float32)))
+    return y @ np.asarray(p["out_proj"])
+
+
+def test_ssd_chunked_matches_naive():
+    p = S.ssm_init(K, CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32)) * 0.5
+    y = S.ssm_apply(p, x, CFG)
+    y_ref = naive_ssd(p, x, CFG)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_matches_full():
+    p = S.ssm_init(K, CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 32)) * 0.5
+    y_full = S.ssm_apply(p, x, CFG)
+    cache = S.ssm_init_cache(CFG, 1, jnp.float32)
+    outs = []
+    for t in range(16):
+        y, cache = S.ssm_decode_step(p, x[:, t:t+1], cache, CFG)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_prefill_state_matches_decode_state():
+    p = S.ssm_init(K, CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 24, 32)) * 0.5
+    st = S.ssm_prefill_state(p, x, CFG)
+    cache = S.ssm_init_cache(CFG, 1, jnp.float32)
+    for t in range(24):
+        _, cache = S.ssm_decode_step(p, x[:, t:t+1], cache, CFG)
+    np.testing.assert_allclose(np.asarray(st["H"]), np.asarray(cache["H"]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st["conv_x"]),
+                               np.asarray(cache["conv_x"]), rtol=1e-5)
+
+
+RCFG = LMConfig(name="t", d_model=32, n_layers=1, layer_pattern=("rglru",),
+                d_ff=64, vocab=64, lru_dim=32, zebra_enabled=False)
+
+
+def naive_rglru(p, x, cfg):
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    u = R._causal_conv1d(x @ p["w_rec_branch"], p["conv_w"])
+    a, b = R._gates(p, u)
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    h = np.zeros_like(a[:, 0])
+    hs = np.zeros_like(a)
+    for t in range(a.shape[1]):
+        h = a[:, t] * h + b[:, t]
+        hs[:, t] = h
+    return (hs.astype(np.float32) * np.asarray(gate)) @ np.asarray(p["w_out"])
+
+
+def test_rglru_scan_matches_naive():
+    p = R.rglru_init(K, RCFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 20, 32)) * 0.5
+    y = R.rglru_apply(p, x, RCFG)
+    np.testing.assert_allclose(np.asarray(y), naive_rglru(p, x, RCFG),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decode_matches_full():
+    p = R.rglru_init(K, RCFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 12, 32)) * 0.5
+    y_full = R.rglru_apply(p, x, RCFG)
+    cache = R.rglru_init_cache(RCFG, 1, jnp.float32)
+    outs = []
+    for t in range(12):
+        y, cache = R.rglru_decode_step(p, x[:, t:t+1], cache, RCFG)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-3, atol=2e-3)
