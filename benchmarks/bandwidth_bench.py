@@ -1,0 +1,102 @@
+"""Predicted vs *measured* bandwidth reduction (the paper's headline
+metric, Eq. 2/3, as an observable).
+
+For each model config and each ``t_obj`` in the sweep, a block-structured
+activation map is masked by the Pallas comparator, packed into the
+``(bitmap, payload)`` stream, and the stream's actual byte count is
+reconciled against ``stored_bits(spec, zero_frac)`` at the *measured*
+zero-block fraction. The two must agree to within index-padding rounding
+(< 1 byte per map) — that assertion runs on every invocation.
+
+    PYTHONPATH=src python benchmarks/bandwidth_bench.py [--smoke] [--full]
+
+Prints ``name,us_per_call,derived`` CSV per row (run.py convention).
+"""
+from __future__ import annotations
+
+import argparse
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.compress import BandwidthMeter, compress, decompress
+from repro.core import reduced_bandwidth_pct, stored_bits
+from repro.kernels import zebra_mask_op
+
+try:
+    from .common import timeit
+except ImportError:                     # direct script run (CI smoke)
+    from common import timeit
+
+# reduced-width archs whose d_ff is lane-aligned (K % 128 == 0)
+ARCHS = ("gemma3-4b", "recurrentgemma-2b", "starcoder2-15b")
+# block scales are ~U[0,1]; blockmax of 1024 normals is ~3.3, so this sweep
+# lands zero fractions near {0, ~1/4, ~1/2, ~3/4, 1}
+T_SWEEP = (0.0, 0.8, 1.65, 2.5, 1e9)
+
+
+def _blocky_map(key, M, K, bs, bc, dtype):
+    """Activations whose (bs, bc) blocks have uniform-random magnitudes."""
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    scale = jax.random.uniform(jax.random.fold_in(key, 1), (M // bs, K // bc))
+    x = x * jnp.repeat(jnp.repeat(scale, bs, 0), bc, 1)
+    return x.astype(dtype)
+
+
+def run(smoke: bool = False, dtype=jnp.bfloat16):
+    archs = ARCHS[:1] if smoke else ARCHS
+    sweep = T_SWEEP[::2] if smoke else T_SWEEP
+    batch, seq = (2, 32) if smoke else (4, 64)
+    meter = BandwidthMeter()
+    rows = []
+    for arch in archs:
+        cfg = configs.reduced(arch)
+        bs, bc = cfg.zebra_block_seq, cfg.zebra_block_ch
+        M, K = batch * seq, cfg.d_ff
+        key = jax.random.PRNGKey(zlib.crc32(arch.encode()) & 0xFFFF)
+        x = _blocky_map(key, M, K, bs, bc, dtype)
+        for t in sweep:
+            y, bm = zebra_mask_op(x, t, bs=bs, bc=bc)
+            cm = compress(y, bm, bs=bs, bc=bc)
+            np.testing.assert_array_equal(          # transport is lossless
+                np.asarray(decompress(cm)), np.asarray(y))
+            r = meter.record(f"{arch}/t_obj={t:g}", cm)
+            us = timeit(lambda: compress(y, bm, bs=bs, bc=bc).payload,
+                        iters=1 if smoke else 3, warmup=1)
+            spec = cm.spec()
+            rows.append({
+                "name": f"bandwidth/{arch}/t_obj={t:g}",
+                "us_per_call": us,
+                "zero_frac": round(cm.zero_frac(), 4),
+                "dense_bytes": cm.dense_bytes(),
+                "measured_bytes": cm.measured_bytes(),
+                "predicted_bytes": round(stored_bits(spec, cm.zero_frac()) / 8, 2),
+                "measured_red_pct": round(
+                    100 * (1 - cm.measured_bytes() / cm.dense_bytes()), 2),
+                "predicted_red_pct": round(
+                    reduced_bandwidth_pct([spec], [cm.zero_frac()]), 2),
+            })
+    rec = meter.reconcile()     # raises if any site breaks the padding bound
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+    print(f"# reconcile: {rec['n_sites']} maps across {len(archs)} configs, "
+          f"max |measured - predicted| = {rec['max_abs_delta_bytes']:.2f} B "
+          f"(bound: index padding < 1 B/map)")
+    return rows, rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 config x 3 thresholds, tiny maps (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,11 +19,12 @@ def main() -> None:
                     help="full grids + longer training budgets")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "kernels,roofline")
+                         "kernels,roofline,bandwidth")
     args = ap.parse_args()
 
-    from . import (kernel_bench, roofline, table1_zero_blocks, table2_cifar,
-                   table3_tinyimagenet, table4_ablation, table5_overhead)
+    from . import (bandwidth_bench, kernel_bench, roofline, table1_zero_blocks,
+                   table2_cifar, table3_tinyimagenet, table4_ablation,
+                   table5_overhead)
     from .common import FULL, QUICK
 
     budget = FULL if args.full else QUICK
@@ -36,6 +37,7 @@ def main() -> None:
         "table2": lambda: table2_cifar.run(budget, quick),
         "table3": lambda: table3_tinyimagenet.run(budget, quick),
         "table4": lambda: table4_ablation.run(budget, quick),
+        "bandwidth": lambda: bandwidth_bench.run(smoke=quick),
     }
     only = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -18,6 +18,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="compressed activation transport (Pallas pack/unpack"
+                         " + measured-bytes accounting)")
     args = ap.parse_args()
 
     # ~100M-class member of the gemma3 family (6 layers of the 5:1 pattern)
@@ -37,6 +40,8 @@ def main():
     sys.argv = ["serve", "--arch", "gemma3-mini", "--reduced",
                 "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
                 "--gen", str(args.gen), "--t-obj", "0.05"]
+    if args.use_kernel:
+        sys.argv.append("--use-kernel")
     serve_mod.main()
 
 

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 CI: run the suite without hypothesis (shim fallback), then with
+# hypothesis if it can be installed, then the bandwidth benchmark smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (hypothesis-optional shim path) =="
+python -m pytest -x -q
+
+if python -c "import hypothesis" 2>/dev/null; then
+    echo "== hypothesis already present =="
+elif pip install --quiet hypothesis 2>/dev/null; then
+    echo "== tier-1 (with hypothesis) =="
+    python -m pytest -x -q
+else
+    echo "== pip install hypothesis unavailable (offline) — shim run only =="
+fi
+
+echo "== bandwidth bench (smoke) =="
+python benchmarks/bandwidth_bench.py --smoke
+echo "CI OK"

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401
+from .manager import (CheckpointManager, save_pytree, load_pytree,  # noqa: F401
+                      save_compressed_acts, load_compressed_acts)

@@ -19,6 +19,7 @@ import threading
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
@@ -59,6 +60,77 @@ def load_pytree(path: str, like: PyTree, host_id: int = 0) -> PyTree:
         arr = data[key]
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_compressed_acts(path: str, acts: dict[str, Any], bs: int = 8,
+                         bc: int = 128) -> dict:
+    """Persist activation maps as compressed streams in one .npz.
+
+    Per map ``name``: ``<name>/payload`` (live blocks only — the trim is
+    what makes the file small), ``<name>/index`` (packed bitmap) and
+    ``<name>/meta`` = [*shape, m, k, bs, bc]. Maps whose flattened 2-D view
+    doesn't divide by (bs, bc) are stored dense under ``<name>/dense``.
+    Returns per-map {dense_bytes, stored_bytes}."""
+    from ..compress.stream import compress
+
+    arrs: dict[str, np.ndarray] = {}
+    stats: dict[str, dict] = {}
+    for name, x in acts.items():
+        xa = np.asarray(x)
+        flat_k = xa.shape[-1] if xa.ndim >= 2 else 0
+        flat_m = int(np.prod(xa.shape[:-1])) if xa.ndim >= 2 else 0
+        if not flat_m or flat_m % bs or flat_k % bc or \
+                xa.dtype not in (np.float32, np.float16) and \
+                xa.dtype.name != "bfloat16":  # f64 would downcast via jnp
+            arrs[f"{name}/dense"] = xa
+            stats[name] = {"dense_bytes": xa.nbytes, "stored_bytes": xa.nbytes}
+            continue
+        cm = compress(jnp.asarray(xa), bs=bs, bc=bc, use_kernel=False)
+        n_live = int(cm.n_live)
+        payload = np.asarray(cm.payload)[:n_live]          # the actual trim
+        index = np.asarray(cm.index)
+        arrs[f"{name}/dtype"] = np.asarray(payload.dtype.name)
+        if payload.dtype.name == "bfloat16":               # not npz-native
+            payload = payload.view(np.uint16)
+        arrs[f"{name}/payload"] = payload
+        arrs[f"{name}/index"] = index
+        arrs[f"{name}/meta"] = np.asarray(
+            [*xa.shape, cm.m, cm.k, bs, bc], np.int64)
+        stats[name] = {"dense_bytes": xa.nbytes,
+                       "stored_bytes": payload.nbytes + index.nbytes}
+    np.savez(path, **arrs)
+    return stats
+
+
+def load_compressed_acts(path: str) -> dict[str, np.ndarray]:
+    """Inverse of save_compressed_acts: dense maps, bit-exact."""
+    from ..compress.stream import CompressedMap, decompress
+
+    data = np.load(path)
+    out: dict[str, np.ndarray] = {}
+    for key in data.files:
+        if "/" not in key:                 # save_acts(compressed=False) keys
+            out[key] = data[key]
+            continue
+        name, kind = key.rsplit("/", 1)
+        if kind == "dense":
+            out[name] = data[key]
+        elif kind == "payload":
+            meta = data[f"{name}/meta"]
+            m, k, bs, bc = (int(v) for v in meta[-4:])
+            shape = tuple(int(v) for v in meta[:-4])
+            payload = data[key]
+            if str(data[f"{name}/dtype"]) == "bfloat16":
+                payload = payload.view(jnp.bfloat16)
+            n_blocks = (m // bs) * (k // bc)
+            full = np.zeros((n_blocks, bs, bc), payload.dtype)
+            full[: payload.shape[0]] = payload
+            cm = CompressedMap(payload=jnp.asarray(full),
+                               index=jnp.asarray(data[f"{name}/index"]),
+                               n_live=jnp.int32(payload.shape[0]),
+                               shape=shape, m=m, k=k, bs=bs, bc=bc)
+            out[name] = np.asarray(decompress(cm, use_kernel=False))
+    return out
 
 
 class CheckpointManager:
@@ -118,6 +190,25 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    # Zebra-masked activation maps, persisted in compressed stream form
+    # (README.md §Compressed activation transport): payload trimmed to
+    # n_live blocks + packed 1-bit index, so the on-disk size tracks
+    # stored_bits(), not the dense map size.
+    def save_acts(self, step: int, acts: dict[str, Any],
+                  compressed: bool = True, bs: int = 8, bc: int = 128) -> dict:
+        path = os.path.join(self.dir, f"acts_{step}.npz")
+        if not compressed:
+            arrs = {name: np.asarray(x) for name, x in acts.items()}
+            np.savez(path, **arrs)
+            return {name: {"dense_bytes": a.nbytes, "stored_bytes": a.nbytes}
+                    for name, a in arrs.items()}
+        return save_compressed_acts(path, acts, bs=bs, bc=bc)
+
+    def restore_acts(self, step: int) -> dict[str, np.ndarray]:
+        path = os.path.join(self.dir, f"acts_{step}.npz")
+        return load_compressed_acts(path)
 
     def restore(self, like: PyTree, step: int | None = None) -> tuple[int, PyTree, dict]:
         self.wait()

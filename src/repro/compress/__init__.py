@@ -1,0 +1,15 @@
+"""Compressed activation transport — the paper's (bitmap, payload) stream
+made real: pack/unpack codecs over Zebra-masked maps plus measured-bytes
+accounting that reconciles against the Eq. 2/3 analytic predictions."""
+from .stream import (  # noqa: F401
+    CompressedMap,
+    compress,
+    decompress,
+    compress_tree,
+    decompress_tree,
+    nonzero_bitmap,
+    pack_bitmap,
+    unpack_bitmap,
+    transport_tokens,
+)
+from .meter import BandwidthMeter, SiteRecord  # noqa: F401

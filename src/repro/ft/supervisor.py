@@ -94,6 +94,8 @@ class StepSupervisor:
                 jax.block_until_ready(metrics["loss"])
             except Exception:  # noqa: BLE001 — node-failure path
                 self.failures += 1
+                self.ckpt.wait()   # an in-flight async save may be the newest
+                                   # restore point — land it before deciding
                 if self.failures > self.cfg.max_failures or self.ckpt.latest_step() is None:
                     raise
                 step, state, extra = self.ckpt.restore(state)

@@ -1,4 +1,6 @@
 """Pallas TPU kernels for the paper's compute hot-spot: the Zebra
-comparator (zebra_mask) and the block-skipping GEMM (zebra_spmm)."""
-from .ops import zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden  # noqa: F401
+comparator (zebra_mask), the block-skipping GEMM (zebra_spmm), and the
+compressed-transport pack/unpack pair (zebra_pack / zebra_unpack)."""
+from .ops import (zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden,  # noqa: F401
+                  zebra_pack_op, zebra_unpack_op)
 from . import ref  # noqa: F401

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .pack import zebra_pack, zebra_unpack
 from .zebra_mask import zebra_mask
 from .zebra_spmm import zebra_spmm
 from . import ref
@@ -27,6 +28,17 @@ def zebra_mask_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
 def zebra_spmm_op(x: jax.Array, w: jax.Array, bitmap: jax.Array,
                   bs: int = 8, bc: int = 128, interpret: bool = True):
     return zebra_spmm(x, w, bitmap, bs=bs, bc=bc, interpret=interpret)
+
+
+def zebra_pack_op(x: jax.Array, bitmap: jax.Array, bs: int = 8, bc: int = 128,
+                  interpret: bool = True):
+    """Compact live blocks of a masked (M, K) map -> (payload, n_live)."""
+    return zebra_pack(x, bitmap, bs=bs, bc=bc, interpret=interpret)
+
+
+def zebra_unpack_op(payload: jax.Array, bitmap: jax.Array, bs: int = 8,
+                    bc: int = 128, interpret: bool = True):
+    return zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=interpret)
 
 
 def zebra_ffn_hidden(x: jax.Array, w_out: jax.Array, t_obj: float,

@@ -1,0 +1,113 @@
+"""Pallas TPU kernels: compressed activation transport (pack / unpack).
+
+``zebra_pack`` compacts the *surviving* ``(bs, bc)`` blocks of a
+Zebra-masked ``(M, K)`` map into a dense payload — live blocks first, in
+row-major block order — so the accelerator moves only
+``n_live * bs * bc * itemsize`` payload bytes plus the 1-bit-per-block
+index (paper Eq. 2/3) instead of the full map. ``zebra_unpack`` is the
+exact inverse. Stream format: README.md §Compressed activation transport.
+
+Because JAX shapes are static, the payload buffer is allocated at the
+worst case (``n_blocks`` slots); the *measured* stream length is
+``n_live`` slots and everything past it is zeroed. Compaction runs as a
+scatter through the output BlockSpec index_map: block ``g``'s destination
+slot is the exclusive prefix sum of the keep flags (scalar-prefetched in
+SMEM). Dead blocks write to the slot the *next* live block also maps to,
+so the sequential TPU grid makes the live block's write win — the dual of
+zebra_spmm's revolving-door read trick. Visits to each output slot are a
+single contiguous run of grid steps (the prefix sum is monotone), which
+is what the TPU output-revisiting rule requires.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(dmap_ref, keep_ref, x_ref, out_ref):
+    del dmap_ref, keep_ref
+    out_ref[...] = x_ref[...][None]
+
+
+def _unpack_kernel(smap_ref, keep_ref, p_ref, out_ref, *, nk: int):
+    del smap_ref
+    i, j = pl.program_id(0), pl.program_id(1)
+    live = keep_ref[i * nk + j] != 0
+    blk = p_ref[...][0]
+    out_ref[...] = jnp.where(live, blk, jnp.zeros_like(blk))
+
+
+def _prefix(bitmap: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """keep flags + exclusive prefix sum (the block -> payload-slot map)."""
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+    return keep, (jnp.cumsum(keep) - keep).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "interpret"))
+def zebra_pack(x: jax.Array, bitmap: jax.Array, *, bs: int = 8, bc: int = 128,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Compact live blocks of a masked (M, K) map.
+
+    Returns (payload (n_blocks, bs, bc) — live blocks first, zero tail —
+    and n_live () int32).
+    """
+    M, K = x.shape
+    if M % bs or K % bc:
+        raise ValueError(f"(M={M}, K={K}) must divide by block ({bs},{bc})")
+    nm, nk = M // bs, K // bc
+    assert bitmap.shape == (nm, nk), (bitmap.shape, nm, nk)
+    nb = nm * nk
+    keep, dmap = _prefix(bitmap)
+    n_live = jnp.sum(keep)
+
+    payload = pl.pallas_call(
+        _pack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nm, nk),
+            in_specs=[
+                pl.BlockSpec((bs, bc), lambda i, j, dmap, keep: (i, j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bs, bc), lambda i, j, dmap, keep: (dmap[i * nk + j], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, bs, bc), x.dtype),
+        interpret=interpret,
+    )(dmap, keep, x)
+
+    # Slots >= n_live hold either stale dead-block writes or uninitialized
+    # memory; zero them so the stream (and comparisons) are deterministic.
+    live_slot = jnp.arange(nb)[:, None, None] < n_live
+    payload = jnp.where(live_slot, payload, jnp.zeros((), x.dtype))
+    return payload, n_live.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "interpret"))
+def zebra_unpack(payload: jax.Array, bitmap: jax.Array, *, bs: int = 8,
+                 bc: int = 128, interpret: bool = True) -> jax.Array:
+    """Inverse of zebra_pack: (n_blocks, bs, bc) payload -> dense (M, K)."""
+    nm, nk = bitmap.shape
+    assert payload.shape == (nm * nk, bs, bc), (payload.shape, nm, nk, bs, bc)
+    keep, smap = _prefix(bitmap)
+
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nm, nk),
+            in_specs=[
+                # dead block: revolving-door fetch of an arbitrary valid slot,
+                # zeroed in-kernel (exclusive prefix sum <= n_live <= nb - 1
+                # whenever a dead block exists, so the index stays in bounds).
+                pl.BlockSpec(
+                    (1, bs, bc), lambda i, j, smap, keep: (smap[i * nk + j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bs, bc), lambda i, j, smap, keep: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nm * bs, nk * bc), payload.dtype),
+        interpret=interpret,
+    )(smap, keep, payload)

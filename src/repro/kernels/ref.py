@@ -38,3 +38,40 @@ def zebra_spmm_ref(x: jax.Array, w: jax.Array, bitmap: jax.Array,
 def zebra_mask_then_spmm_ref(x, w, t_obj, bs, bc):
     y, bm = zebra_mask_ref(x, t_obj, bs, bc)
     return y.astype(jnp.float32) @ w.astype(jnp.float32), bm
+
+
+def _to_blocks(x: jax.Array, bs: int, bc: int) -> jax.Array:
+    """(M, K) -> (n_blocks, bs, bc) in row-major block order."""
+    M, K = x.shape
+    nm, nk = M // bs, K // bc
+    return x.reshape(nm, bs, nk, bc).transpose(0, 2, 1, 3).reshape(nm * nk, bs, bc)
+
+
+def _from_blocks(blocks: jax.Array, nm: int, nk: int) -> jax.Array:
+    bs, bc = blocks.shape[-2:]
+    return (blocks.reshape(nm, nk, bs, bc).transpose(0, 2, 1, 3)
+            .reshape(nm * bs, nk * bc))
+
+
+def zebra_pack_ref(x: jax.Array, bitmap: jax.Array, bs: int, bc: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Compaction oracle: live (bs, bc) blocks first (row-major block order),
+    zeroed tail. Returns (payload (n_blocks, bs, bc), n_live () int32)."""
+    blocks = _to_blocks(x, bs, bc)
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+    n_live = jnp.sum(keep)
+    order = jnp.argsort(1 - keep, stable=True)        # live first, stable
+    payload = blocks[order]
+    live_slot = jnp.arange(blocks.shape[0])[:, None, None] < n_live
+    payload = jnp.where(live_slot, payload, jnp.zeros((), x.dtype))
+    return payload, n_live.astype(jnp.int32)
+
+
+def zebra_unpack_ref(payload: jax.Array, bitmap: jax.Array, bs: int, bc: int
+                     ) -> jax.Array:
+    """Inverse of zebra_pack_ref: scatter payload slots back to (M, K)."""
+    nm, nk = bitmap.shape
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+    src = jnp.cumsum(keep) - keep                     # exclusive prefix sum
+    blocks = payload[src] * keep[:, None, None].astype(payload.dtype)
+    return _from_blocks(blocks, nm, nk)

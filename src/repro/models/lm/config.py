@@ -72,6 +72,9 @@ class LMConfig:
     zebra_block_seq: int = 8
     zebra_block_ch: int = 128
     zebra_sites: tuple[str, ...] = ("ffn_hidden",)  # +"layer_out", +"kv_cache"
+    use_kernel: bool = False         # inference Zebra sites run the Pallas
+                                     # comparator + pack/unpack transport
+                                     # (materializes the compressed stream)
 
     def __post_init__(self):
         if self.head_dim == 0:

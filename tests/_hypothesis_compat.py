@@ -1,0 +1,96 @@
+"""Property-test shim: use hypothesis when installed, otherwise degrade to
+deterministic fixed-seed parametrized cases so tier-1 still collects and
+runs (the container has no network; hypothesis may be absent).
+
+Usage in tests (instead of ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+
+The fallback draws a small fixed number of examples per test from a PRNG
+seeded by the test's qualified name — stable across runs and processes
+(``random.Random(str)`` does not depend on PYTHONHASHSEED).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    _FALLBACK_EXAMPLES = 5      # per test; keep the degraded tier-1 quick
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return rng.choice(self.options)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+    st = _St()
+
+    def settings(max_examples: int = 10, **_kw):
+        """Records max_examples on the (already-@given-wrapped) test."""
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                rng = random.Random(f.__qualname__)
+                for _ in range(n):
+                    draw = {k: s.example(rng) for k, s in strategies.items()}
+                    f(*args, **draw, **kwargs)
+            # pytest must not see the strategy params as fixtures: drop the
+            # __wrapped__ link so inspect.signature reports (*args, **kwargs)
+            wrapper.__dict__.pop("__wrapped__", None)
+            return wrapper
+        return deco

@@ -53,6 +53,37 @@ def test_resnet18_required_bandwidth_scale():
     assert index_overhead_pct(specs) < 1.0              # Table V: ~0.2%
 
 
+def test_eq2_eq3_golden_values():
+    """Pinned numbers for the paper's reference map (64x32x32, B=16, b=4)."""
+    s = MapSpec(c=64, h=32, w=32, bits=16, block=4)
+    assert s.map_bits == 1_048_576
+    assert s.index_bits == 4_096
+    assert stored_bits(s, 0.0) == 1_052_672.0        # dense + index
+    assert np.isclose(stored_bits(s, 0.7), 318_668.8)
+    assert stored_bits(s, 1.0) == 4_096.0            # index only
+
+
+def test_reduced_bandwidth_golden_at_70pct_operating_point():
+    """The paper's ~70% operating point: net saving = 70% minus the
+    1/(b^2*B) index overhead -> 69.609375% exactly for b=4, B=16."""
+    s = MapSpec(c=64, h=32, w=32, bits=16, block=4)
+    assert reduced_bandwidth_pct([s], [0.7]) == 70.0 - 100.0 / (4 * 4 * 16)
+    assert np.isclose(reduced_bandwidth_pct([s], [0.7]), 69.609375)
+    # token-map layout at the same point: index is 1/(bs*bc*B) of the map
+    t = TokenMapSpec(s=256, d=1024, bits=16, block_seq=8, block_ch=128)
+    assert np.isclose(reduced_bandwidth_pct([t], [0.7]),
+                      70.0 - 100.0 / (8 * 128 * 16))
+    assert np.isclose(index_overhead_pct([t]), 100.0 / (8 * 128 * 16))
+
+
+def test_eq4_eq5_golden_values():
+    assert conv_flops(128, 16, 16, 3, 128) == 37_748_736
+    assert conv_flops(128, 16, 16, 3, 128, stride=2) == 18_874_368
+    assert zebra_overhead_flops(128, 16, 16) == 32_768
+    assert np.isclose(overhead_ratio(128, 16, 16, 3, 128),
+                      32_768 / 37_748_736)
+
+
 def test_token_map_spec():
     s = TokenMapSpec(s=4096, d=8192, bits=16, block_seq=8, block_ch=128)
     assert s.n_blocks == (4096 // 8) * (8192 // 128)

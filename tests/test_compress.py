@@ -1,0 +1,278 @@
+"""Compressed activation transport: pack/unpack round trips, kernel vs
+oracle parity, measured-bytes accounting vs Eq. 2/3, and the persistence
+codec."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.checkpoint import load_compressed_acts, save_compressed_acts
+from repro.compress import (BandwidthMeter, CompressedMap, compress,
+                            compress_tree, decompress, decompress_tree,
+                            nonzero_bitmap, pack_bitmap, transport_tokens,
+                            unpack_bitmap)
+from repro.core import stored_bits
+from repro.kernels import (ref, zebra_mask_op, zebra_pack_op, zebra_spmm_op,
+                           zebra_unpack_op)
+from repro.utils import cdiv
+
+K = jax.random.PRNGKey(0)
+
+
+def _blocky(key, M, Kd, bs, bc, live_p=0.5, dtype=jnp.float32):
+    """Block-magnitude-structured activations (as in test_kernels)."""
+    x = jax.random.normal(key, (M, Kd), jnp.float32)
+    scale = (jax.random.uniform(jax.random.fold_in(key, 1),
+                                (M // bs, Kd // bc)) < live_p)
+    x = x * jnp.repeat(jnp.repeat(scale.astype(jnp.float32), bs, 0), bc, 1) \
+        * 2.0 + x * 0.01
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Round trip + parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,Kd,bs,bc", [
+    (16, 128, 8, 128), (64, 512, 8, 128), (128, 256, 16, 64),
+    (24, 384, 8, 128), (32, 256, 8, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_unpack_roundtrip_sweep(M, Kd, bs, bc, dtype):
+    x = _blocky(K, M, Kd, bs, bc, dtype=dtype)
+    y, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    p, nl = zebra_pack_op(y, bm, bs=bs, bc=bc)
+    z = zebra_unpack_op(p, bm, bs=bs, bc=bc)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(y))   # bit-exact
+    assert int(nl) == int(np.asarray(bm).sum())
+
+
+@pytest.mark.parametrize("t_obj,expect", [
+    (0.0, 0.0),          # zero_frac 0: every block survives
+    (0.5, None),         # ~live_p dead
+    (1e9, 1.0),          # zero_frac 1: nothing survives
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_roundtrip_zero_fraction_extremes(t_obj, expect, dtype):
+    x = _blocky(K, 32, 256, 8, 128, dtype=dtype)
+    y, bm = zebra_mask_op(x, t_obj)
+    cm = compress(y, bm)
+    np.testing.assert_array_equal(np.asarray(decompress(cm)), np.asarray(y))
+    if expect is not None:
+        assert cm.zero_frac() == expect
+
+
+def test_kernel_matches_oracle():
+    x = _blocky(K, 64, 512, 8, 128)
+    y, bm = zebra_mask_op(x, 0.5)
+    p, nl = zebra_pack_op(y, bm)
+    pr, nlr = ref.zebra_pack_ref(y, bm, 8, 128)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    assert int(nl) == int(nlr)
+    np.testing.assert_array_equal(
+        np.asarray(zebra_unpack_op(p, bm)),
+        np.asarray(ref.zebra_unpack_ref(pr, bm, 8, 128)))
+
+
+def test_payload_is_live_blocks_in_order():
+    """Stream layout contract: payload slot r holds the r-th live block in
+    row-major block order; the tail is zero."""
+    bs, bc = 8, 128
+    x = jnp.zeros((24, 256), jnp.float32)
+    x = x.at[:8, 128:].set(1.0)      # block (0,1) -> slot 0
+    x = x.at[16:, :128].set(2.0)     # block (2,0) -> slot 1
+    bm = nonzero_bitmap(x, bs, bc)
+    p, nl = zebra_pack_op(x, bm)
+    assert int(nl) == 2
+    np.testing.assert_array_equal(np.asarray(p[0]), np.ones((bs, bc)))
+    np.testing.assert_array_equal(np.asarray(p[1]), 2 * np.ones((bs, bc)))
+    np.testing.assert_array_equal(np.asarray(p[2:]), 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**30), live=st.floats(0.05, 0.95),
+       dt=st.sampled_from(["float32", "bfloat16"]))
+def test_property_roundtrip_lossless(seed, live, dt):
+    dtype = jnp.dtype(dt)
+    x = _blocky(jax.random.PRNGKey(seed), 32, 256, 8, 128, live, dtype)
+    y, bm = zebra_mask_op(x, 0.5)
+    cm = compress(y, bm)
+    np.testing.assert_array_equal(np.asarray(decompress(cm)), np.asarray(y))
+    # and lossless on the UNMASKED map via the nonzero bitmap
+    cm2 = compress(x)
+    np.testing.assert_array_equal(np.asarray(decompress(cm2)), np.asarray(x))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**30), live=st.floats(0.1, 0.9))
+def test_property_mask_pack_unpack_spmm_matches_ref(seed, live):
+    """zebra_mask -> pack -> unpack -> spmm == zebra_mask_then_spmm_ref."""
+    bs, bc = 8, 128
+    x = _blocky(jax.random.PRNGKey(seed), 32, 256, bs, bc, live)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (256, 64), jnp.float32)
+    y, bm = transport_tokens(x, 0.5, bs=bs, bc=bc)
+    out = zebra_spmm_op(y, w, bm, bs=bs, bc=bc)
+    out_ref, bm_ref = ref.zebra_mask_then_spmm_ref(x, w, 0.5, bs, bc)
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(bm_ref))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bitmap codec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**30), nm=st.integers(1, 9), nk=st.integers(1, 9))
+def test_property_bitmap_pack_roundtrip(seed, nm, nk):
+    bm = (jax.random.uniform(jax.random.PRNGKey(seed), (nm, nk)) < 0.5
+          ).astype(jnp.int8)
+    packed = pack_bitmap(bm)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (cdiv(nm * nk, 8),)
+    np.testing.assert_array_equal(np.asarray(unpack_bitmap(packed, nm, nk)),
+                                  np.asarray(bm))
+
+
+def test_bitmap_bit_order_matches_numpy_packbits():
+    bm = jnp.asarray(np.arange(16).reshape(2, 8) % 3 == 0, jnp.int8)
+    ours = np.asarray(pack_bitmap(bm))
+    ref_bytes = np.packbits(np.asarray(bm).reshape(-1), bitorder="little")
+    np.testing.assert_array_equal(ours, ref_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Measured bytes == Eq. 2/3
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t_obj", [0.0, 0.5, 1e9])
+def test_measured_bytes_match_stored_bits(dtype, t_obj):
+    x = _blocky(K, 64, 512, 8, 128, dtype=dtype)
+    y, bm = zebra_mask_op(x, t_obj)
+    cm = compress(y, bm)
+    # payload: data term of Eq. 2, exactly
+    n_live = int(cm.n_live)
+    assert cm.payload_bytes() == n_live * 8 * 128 * jnp.dtype(dtype).itemsize
+    data_bits = cm.spec().map_bits * (1.0 - cm.zero_frac())
+    assert cm.payload_bytes() * 8 == round(data_bits)
+    # index: Eq. 3 rounded up to whole bytes
+    assert cm.index_bytes() == cdiv(cm.spec().index_bits, 8)
+    # total: within index-padding rounding of stored_bits
+    predicted = stored_bits(cm.spec(), cm.zero_frac()) / 8
+    assert 0 <= cm.measured_bytes() - predicted < 1.0 + 1e-6
+
+
+def test_meter_reconciles_and_reports():
+    meter = BandwidthMeter()
+    for i, t in enumerate((0.0, 0.5, 1e9)):
+        x = _blocky(jax.random.PRNGKey(i), 32, 256, 8, 128)
+        y, bm = zebra_mask_op(x, t)
+        meter.record(f"site{i}", compress(y, bm))
+    meter.record_dense("odd", 123)
+    rec = meter.reconcile()
+    assert rec["n_sites"] == 3
+    assert rec["max_abs_delta_bytes"] < 1.0
+    rep = meter.report()
+    assert "TOTAL" in rep and "site0" in rep
+    assert meter.dense_bytes() == 3 * 32 * 256 * 4 + 123
+    # all-dead map still pays the index: measured reduction < 100%
+    assert 0.0 < meter.measured_reduction_pct() < 100.0
+
+
+def test_meter_flags_bad_site():
+    meter = BandwidthMeter()
+    x = _blocky(K, 32, 256, 8, 128)
+    y, bm = zebra_mask_op(x, 0.5)
+    r = meter.record("s", compress(y, bm))
+    r.payload_bytes += 4096            # corrupt the measurement
+    with pytest.raises(AssertionError):
+        meter.reconcile()
+
+
+# ---------------------------------------------------------------------------
+# Pytree transport + persistence
+# ---------------------------------------------------------------------------
+
+def test_tree_transport_lossless_and_metered():
+    key = jax.random.PRNGKey(3)
+    k4 = jax.random.normal(key, (2, 16, 4, 64), jnp.bfloat16)
+    k4 = k4 * (jnp.abs(k4) > 1.5)          # sparsify
+    tree = {"k": k4, "small": jnp.ones((3, 5), jnp.float32),
+            "ints": jnp.arange(10)}
+    meter = BandwidthMeter()
+    ct = compress_tree(tree, meter=meter, site="kv")
+    assert isinstance(ct["k"], CompressedMap)
+    assert not isinstance(ct["small"], CompressedMap)   # indivisible -> dense
+    dt = decompress_tree(ct)
+    for name in tree:
+        np.testing.assert_array_equal(np.asarray(dt[name]),
+                                      np.asarray(tree[name]))
+    assert any(r.site == "kv/k" and r.compressed for r in meter.records)
+    meter.reconcile()
+
+
+def test_compressed_map_is_pytree():
+    x = _blocky(K, 16, 128, 8, 128)
+    cm = compress(x)
+    leaves, treedef = jax.tree_util.tree_flatten(cm)
+    cm2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(decompress(cm2)), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_checkpoint_compressed_acts_roundtrip_and_shrinks(dtype):
+    x = _blocky(K, 64, 512, 8, 128, live_p=0.3, dtype=dtype)
+    y, _ = zebra_mask_op(x, 0.5)
+    acts = {"ffn_hidden": np.asarray(y), "odd": np.ones((3, 5), np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "acts.npz")
+        stats = save_compressed_acts(path, acts)
+        back = load_compressed_acts(path)
+        for name in acts:
+            assert back[name].dtype == acts[name].dtype
+            np.testing.assert_array_equal(back[name], acts[name])
+        assert stats["ffn_hidden"]["stored_bytes"] \
+            < stats["ffn_hidden"]["dense_bytes"]
+        assert stats["odd"]["stored_bytes"] == acts["odd"].nbytes
+
+
+def test_checkpoint_acts_dense_mode_and_f64_fallback(tmp_path):
+    """save_acts(compressed=False) must be readable by restore_acts, and
+    float64 maps (which jnp would downcast) take the dense path bit-exact."""
+    from repro.checkpoint import CheckpointManager
+
+    x = np.random.RandomState(0).randn(16, 256).astype(np.float32)
+    x64 = np.random.RandomState(1).randn(16, 256)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save_acts(1, {"h": x}, compressed=False)
+    np.testing.assert_array_equal(mgr.restore_acts(1)["h"], x)
+    stats = mgr.save_acts(2, {"h64": x64})
+    back = mgr.restore_acts(2)
+    assert back["h64"].dtype == np.float64
+    np.testing.assert_array_equal(back["h64"], x64)
+    assert stats["h64"]["stored_bytes"] == x64.nbytes
+
+
+# ---------------------------------------------------------------------------
+# The serve-path integration point
+# ---------------------------------------------------------------------------
+
+def test_ffn_use_kernel_transport_matches_jnp_site():
+    from repro.models.lm.config import LMConfig
+    from repro.models.lm.ffn import ffn_apply, ffn_init
+
+    cfg = LMConfig(n_layers=1, d_model=64, n_heads=4, d_ff=256, vocab=128,
+                   zebra_t_obj=0.5, zebra_block_seq=8, zebra_block_ch=128)
+    p = ffn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
+    y0, aux0 = ffn_apply(p, x, cfg, "infer")
+    y1, aux1 = ffn_apply(p, x, cfg.replace(use_kernel=True), "infer")
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-6, atol=1e-6)
+    assert np.isclose(float(aux0[1]), float(aux1[1]))   # zero_frac agrees
+    assert float(aux0[2]) == float(aux1[2])             # n_blocks agrees

@@ -23,8 +23,8 @@ C._mod = lambda a: mod if a == "R" else _orig(a)
 SHAPES["t_train"] = ShapeCell("t_train", 128, 8, "train")
 SHAPES["t_decode"] = ShapeCell("t_decode", 128, 8, "decode")
 SHAPES["t_long"] = ShapeCell("t_long", 128, 1, "decode")   # batch=1 path
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _make_mesh
+mesh = _make_mesh((4, 2), ("data", "model"))
 from repro.launch import roofline as rl
 out = {}
 for shape in ("t_train", "t_decode", "t_long"):

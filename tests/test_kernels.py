@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden
 from repro.kernels import ref
@@ -71,6 +71,23 @@ def test_spmm_skips_dead_blocks_exactly():
     y = zebra_spmm_op(x, w, bm, bs=bs, bc=bc)
     np.testing.assert_allclose(np.asarray(y[:8]), 5.0 * 128, rtol=1e-6)
     np.testing.assert_allclose(np.asarray(y[8:]), 0.0, atol=1e-6)
+
+
+def test_spmm_entire_bitmap_row_dead():
+    """Revolving-door kmap edge case: when every block in a bitmap row is
+    dead, the associative-scan kmap degenerates to all-zeros for that row
+    (always 'replaying' K-block 0). The pl.when guard must still keep the
+    output row exactly zero, and live rows must be unaffected."""
+    bs, bc = 8, 128
+    x = jax.random.normal(K, (24, 256), jnp.float32)
+    bm = jnp.asarray([[1, 1], [0, 0], [1, 0]], jnp.int8)   # row 1 fully dead
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 64), jnp.float32)
+    y = zebra_spmm_op(x, w, bm, bs=bs, bc=bc)
+    yr = ref.zebra_spmm_ref(x, w, np.asarray(bm), bs, bc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(y[8:16]), 0.0)
+    assert float(np.abs(np.asarray(y[:8])).max()) > 0.0
 
 
 @settings(max_examples=10, deadline=None)
