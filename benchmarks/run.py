@@ -1,10 +1,14 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,table5]
+    PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only table1,table5]
 
 Prints ``name,us_per_call,derived`` CSV per row. Training-based tables use
 reduced-width models on procedural data (offline container); Table V,
 kernels and the roofline table are exact accounting.
+
+``--smoke`` is the CI mode (scripts/ci.sh): import-check every bench
+module and run the non-training benches (kernels, bandwidth incl. the CNN
+stream reconciliation, roofline, table5) at toy sizes.
 """
 from __future__ import annotations
 
@@ -12,16 +16,22 @@ import argparse
 import sys
 import time
 
+SMOKE_BENCHES = ("table5", "kernels", "roofline", "bandwidth")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full grids + longer training budgets")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: import-check all benches, run the exact-"
+                         "accounting ones (no training) at toy sizes")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
                          "kernels,roofline,bandwidth")
     args = ap.parse_args()
 
+    # importing every bench module IS the smoke import-check
     from . import (bandwidth_bench, kernel_bench, roofline, table1_zero_blocks,
                    table2_cifar, table3_tinyimagenet, table4_ablation,
                    table5_overhead)
@@ -37,9 +47,14 @@ def main() -> None:
         "table2": lambda: table2_cifar.run(budget, quick),
         "table3": lambda: table3_tinyimagenet.run(budget, quick),
         "table4": lambda: table4_ablation.run(budget, quick),
-        "bandwidth": lambda: bandwidth_bench.run(smoke=quick),
+        "bandwidth": lambda: bandwidth_bench.run(smoke=quick or args.smoke),
     }
-    only = args.only.split(",") if args.only else list(benches)
+    if args.only:
+        only = args.only.split(",")
+    elif args.smoke:
+        only = list(SMOKE_BENCHES)
+    else:
+        only = list(benches)
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in only:

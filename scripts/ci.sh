@@ -18,6 +18,6 @@ else
     echo "== pip install hypothesis unavailable (offline) — shim run only =="
 fi
 
-echo "== bandwidth bench (smoke) =="
-python benchmarks/bandwidth_bench.py --smoke
+echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes) =="
+python -m benchmarks.run --smoke
 echo "CI OK"

@@ -62,14 +62,38 @@ def load_pytree(path: str, like: PyTree, host_id: int = 0) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _stream_layout(shape: tuple[int, ...], bs: int, bc: int,
+                   block_hw: int) -> tuple[tuple[int, int], int, int] | None:
+    """Pick the engine tile-grid view for one map. 4-D NCHW maps use the
+    paper's spatial ``b x b`` block layout (core.engine.nchw_stream_dims)
+    — the blocks a Zebra CNN site actually zeroed — before anything else;
+    other maps use the token layout ``(..., K)`` with (bs, bc) tiles when
+    it divides. None = store dense."""
+    from ..core.engine import nchw_stream_dims
+
+    nchw = nchw_stream_dims(shape, block_hw)
+    if nchw is not None:
+        m, k, b = nchw
+        if b > 1 or block_hw == 1:
+            return (m, k), b, b
+    flat_k = shape[-1] if len(shape) >= 2 else 0
+    flat_m = int(np.prod(shape[:-1])) if len(shape) >= 2 else 0
+    if flat_m and flat_m % bs == 0 and flat_k % bc == 0:
+        return (flat_m, flat_k), bs, bc
+    return None
+
+
 def save_compressed_acts(path: str, acts: dict[str, Any], bs: int = 8,
-                         bc: int = 128) -> dict:
+                         bc: int = 128, block_hw: int = 4) -> dict:
     """Persist activation maps as compressed streams in one .npz.
 
     Per map ``name``: ``<name>/payload`` (live blocks only — the trim is
     what makes the file small), ``<name>/index`` (packed bitmap) and
-    ``<name>/meta`` = [*shape, m, k, bs, bc]. Maps whose flattened 2-D view
-    doesn't divide by (bs, bc) are stored dense under ``<name>/dense``.
+    ``<name>/meta`` = [*shape, m, k, bs, bc]. Block layout follows the
+    site engine: token maps tile ``(..., K)`` with (bs, bc); 4-D NCHW maps
+    fall back to the paper's spatial ``block_hw x block_hw`` blocks
+    flattened onto the same tile grid (so CNN maps compress too). Maps
+    fitting neither are stored dense under ``<name>/dense``.
     Returns per-map {dense_bytes, stored_bytes}."""
     from ..compress.stream import compress
 
@@ -77,15 +101,16 @@ def save_compressed_acts(path: str, acts: dict[str, Any], bs: int = 8,
     stats: dict[str, dict] = {}
     for name, x in acts.items():
         xa = np.asarray(x)
-        flat_k = xa.shape[-1] if xa.ndim >= 2 else 0
-        flat_m = int(np.prod(xa.shape[:-1])) if xa.ndim >= 2 else 0
-        if not flat_m or flat_m % bs or flat_k % bc or \
-                xa.dtype not in (np.float32, np.float16) and \
-                xa.dtype.name != "bfloat16":  # f64 would downcast via jnp
+        layout = _stream_layout(tuple(xa.shape), bs, bc, block_hw)
+        if layout is None or (
+                xa.dtype not in (np.float32, np.float16) and
+                xa.dtype.name != "bfloat16"):  # f64 would downcast via jnp
             arrs[f"{name}/dense"] = xa
             stats[name] = {"dense_bytes": xa.nbytes, "stored_bytes": xa.nbytes}
             continue
-        cm = compress(jnp.asarray(xa), bs=bs, bc=bc, use_kernel=False)
+        (m_dim, k_dim), ebs, ebc = layout
+        cm = compress(jnp.asarray(xa).reshape(m_dim, k_dim), bs=ebs, bc=ebc,
+                      use_kernel=False)
         n_live = int(cm.n_live)
         payload = np.asarray(cm.payload)[:n_live]          # the actual trim
         index = np.asarray(cm.index)
@@ -95,7 +120,7 @@ def save_compressed_acts(path: str, acts: dict[str, Any], bs: int = 8,
         arrs[f"{name}/payload"] = payload
         arrs[f"{name}/index"] = index
         arrs[f"{name}/meta"] = np.asarray(
-            [*xa.shape, cm.m, cm.k, bs, bc], np.int64)
+            [*xa.shape, cm.m, cm.k, ebs, ebc], np.int64)
         stats[name] = {"dense_bytes": xa.nbytes,
                        "stored_bytes": payload.nbytes + index.nbytes}
     np.savez(path, **arrs)
@@ -197,14 +222,15 @@ class CheckpointManager:
     # n_live blocks + packed 1-bit index, so the on-disk size tracks
     # stored_bits(), not the dense map size.
     def save_acts(self, step: int, acts: dict[str, Any],
-                  compressed: bool = True, bs: int = 8, bc: int = 128) -> dict:
+                  compressed: bool = True, bs: int = 8, bc: int = 128,
+                  block_hw: int = 4) -> dict:
         path = os.path.join(self.dir, f"acts_{step}.npz")
         if not compressed:
             arrs = {name: np.asarray(x) for name, x in acts.items()}
             np.savez(path, **arrs)
             return {name: {"dense_bytes": a.nbytes, "stored_bytes": a.nbytes}
                     for name, a in arrs.items()}
-        return save_compressed_acts(path, acts, bs=bs, bc=bc)
+        return save_compressed_acts(path, acts, bs=bs, bc=bc, block_hw=block_hw)
 
     def restore_acts(self, step: int) -> dict[str, np.ndarray]:
         path = os.path.join(self.dir, f"acts_{step}.npz")

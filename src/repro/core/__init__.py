@@ -10,6 +10,15 @@ from .zebra import (  # noqa: F401
     collect_zebra_loss,
     mean_zero_frac,
 )
+from .engine import (  # noqa: F401
+    BACKENDS,
+    LayerAux,
+    SiteAux,
+    nchw_stream_dims,
+    site_block,
+    wants_fused,
+    zebra_site,
+)
 from .bandwidth import (  # noqa: F401
     MapSpec,
     TokenMapSpec,

@@ -1,0 +1,342 @@
+"""Unified Zebra site engine — ONE backend-dispatched execution path for
+every activation site in the repo (CNN maps, LM FFN hidden maps, layer
+outputs, KV caches).
+
+The paper's pipeline is ``comparator -> block mask -> compressed DRAM
+stream``; this module is the single code path that realizes it. Model code
+never calls ``zebra_cnn`` / ``zebra_tokens`` / the Pallas kernels / the
+stream codec directly — it calls :func:`zebra_site` and the engine picks
+the execution backend from ``ZebraConfig.backend`` (with per-site
+overrides via ``ZebraConfig.site_backends``):
+
+``reference``
+    Pure-jnp masking (``core.zebra``). The only backend with training
+    semantics: threshold nets, the Eq. 1 regularizer and the hard/ste/soft
+    gradient modes live here, so ``mode="train"`` always runs reference
+    regardless of the configured backend.
+``pallas``
+    The fused comparator kernel (``kernels.zebra_mask``): one VMEM pass
+    computes block maxima, compares against T_obj and zeroes dead blocks.
+    Infer only; bitwise-identical to reference.
+``stream``
+    comparator -> ``zebra_pack`` -> ``zebra_unpack``: the map actually
+    crosses the site in compressed ``(bitmap, payload)`` form and
+    ``SiteAux.measured_bytes`` reports the observed stream length
+    (payload + packed index, the Eq. 2/3 observable). Numerically
+    identical to reference — but the bytes are real.
+``fused``
+    comparator + ``zebra_spmm``: the downstream matmul consumes the keep
+    bitmap and *skips* dead blocks (dynamic feature-map pruning, Liang et
+    al. 2018 style). Needs the downstream weight ``w``; used by the dense
+    FFN ``w_down``. Reports the same fetched-bytes accounting as stream
+    (live payload + index is exactly what the GEMM reads from HBM).
+
+Layouts. ``tokens`` maps ``(..., S, D)`` tile into ``(block_seq,
+block_ch)`` VMEM blocks. ``nchw`` maps ``(B, C, H, W)`` use the paper's
+spatial ``b x b`` blocks per channel; the engine flattens them onto the
+kernels' 2-D ``(M, K)`` tile grid as ``(B*C*H, W)`` with ``bs = bc = b``
+— every ``(b, b)`` tile of that matrix is exactly one spatial block of
+one channel (H, W divide by b, so tiles never straddle planes). That one
+reshape is what gives CNN maps real compressed transport.
+
+Block adaptation mirrors the historical per-site behavior: NCHW blocks
+shrink to the largest divisor of (H, W) (paper: "block size 2 when the
+map goes to 2x2") and stay on the selected backend; token maps whose S
+doesn't divide by ``block_seq`` (e.g. single-token decode) degrade to
+``bs=1`` and fall back to ``reference`` — a one-row "block" has no
+skippable HBM tile, so kernel dispatch would be pure overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .zebra import ZebraConfig, zebra_cnn, zebra_tokens
+
+BACKENDS = ("reference", "pallas", "stream", "fused")
+
+
+# ---------------------------------------------------------------------------
+# The uniform per-site aux struct
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SiteAux:
+    """What one Zebra site reports, uniformly across backends.
+
+    ``reg``             Eq. 1 regularizer term (0 outside train/reference).
+    ``zero_frac``       fraction of blocks masked to zero at this site.
+    ``measured_bytes``  observed transport bytes (payload + packed index)
+                        for the whole input; 0 for backends that move the
+                        map dense (reference/pallas) or do not run.
+    ``n_blocks``        static per-sample block count (0 when disabled),
+                        the weight used by ``mean_zero_frac``.
+    ``thresholds``      train-mode thresholds (None in infer mode).
+    ``backend``         which backend actually executed (static).
+
+    Supports dict-style access (``aux["zero_frac"]``, ``aux.get(...)``)
+    so it is a drop-in for the legacy per-site aux dicts.
+    """
+    reg: Any = 0.0
+    zero_frac: Any = 0.0
+    measured_bytes: Any = 0.0
+    n_blocks: Any = 0
+    thresholds: Any = None
+    backend: str = "reference"
+
+    def tree_flatten(self):
+        return ((self.reg, self.zero_frac, self.measured_bytes,
+                 self.n_blocks, self.thresholds), (self.backend,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        reg, zf, mb, nb, thr = children
+        return cls(reg=reg, zero_frac=zf, measured_bytes=mb, n_blocks=nb,
+                   thresholds=thr, backend=aux[0])
+
+    # legacy dict-style access (pre-engine aux shape)
+    def __getitem__(self, key: str):
+        return getattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    @classmethod
+    def empty(cls, backend: str = "disabled") -> "SiteAux":
+        return cls(reg=jnp.float32(0.0), zero_frac=jnp.float32(0.0),
+                   measured_bytes=jnp.float32(0.0), n_blocks=0,
+                   thresholds=None, backend=backend)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LayerAux:
+    """Site aux accumulated across layers/sites — the scan-carry form.
+
+    Five f32 scalars so it rides ``jax.lax.scan`` carries and jit
+    boundaries. ``zf_blocks`` is Σ zero_frac·n_blocks, so ``zero_frac``
+    (the property) is the block-count-weighted mean with a guard for the
+    no-divisible-leaf / no-site case (n_blocks == 0 -> 0, no div-by-zero).
+    """
+    reg: jax.Array
+    zf_blocks: jax.Array
+    n_blocks: jax.Array
+    measured_bytes: jax.Array
+    router_aux: jax.Array
+
+    def tree_flatten(self):
+        return ((self.reg, self.zf_blocks, self.n_blocks,
+                 self.measured_bytes, self.router_aux), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zero(cls) -> "LayerAux":
+        z = jnp.float32(0.0)
+        return cls(z, z, z, z, z)
+
+    @classmethod
+    def of_site(cls, site: SiteAux, router_aux=0.0) -> "LayerAux":
+        nb = jnp.float32(site.n_blocks)
+        return cls(reg=jnp.float32(site.reg),
+                   zf_blocks=jnp.float32(site.zero_frac) * nb,
+                   n_blocks=nb,
+                   measured_bytes=jnp.float32(site.measured_bytes),
+                   router_aux=jnp.float32(router_aux))
+
+    def __add__(self, other: "LayerAux") -> "LayerAux":
+        return LayerAux(self.reg + other.reg,
+                        self.zf_blocks + other.zf_blocks,
+                        self.n_blocks + other.n_blocks,
+                        self.measured_bytes + other.measured_bytes,
+                        self.router_aux + other.router_aux)
+
+    @property
+    def zero_frac(self) -> jax.Array:
+        return jnp.clip(self.zf_blocks / jnp.maximum(self.n_blocks, 1.0),
+                        0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Block-layout helpers
+# ---------------------------------------------------------------------------
+
+def site_block(h: int, w: int, want: int) -> int:
+    """Largest block size <= want dividing both map sides (paper §II.A:
+    shrink when the map is smaller than the block, e.g. 2 for 2x2 maps)."""
+    b = min(want, h, w)
+    while h % b or w % b:
+        b -= 1
+    return max(b, 1)
+
+
+def nchw_stream_dims(shape: tuple[int, ...], block_hw: int
+                     ) -> tuple[int, int, int] | None:
+    """(B, C, H, W) -> (M, K, b): the 2-D tile-grid view whose (b, b)
+    tiles are exactly the paper's spatial blocks. None if not 4-D."""
+    if len(shape) != 4:
+        return None
+    B, C, H, W = shape
+    b = site_block(H, W, block_hw)
+    return B * C * H, W, b
+
+
+def _tokens_blocks(x: jax.Array, cfg: ZebraConfig) -> tuple[int, int, bool]:
+    """Effective (bs, bc) for a (..., S, D) map + whether bs degenerated."""
+    S, D = x.shape[-2], x.shape[-1]
+    bs = cfg.block_seq if S % cfg.block_seq == 0 else 1
+    bc = cfg.block_ch if D % cfg.block_ch == 0 else D
+    return bs, bc, (bs == 1 and cfg.block_seq > 1)
+
+
+def _tile_sizes(M: int, K: int, bs: int, bc: int) -> tuple[int, int]:
+    """VMEM tile (tm, tk) for the comparator: largest multiple of the block
+    within the default tile, never below one block."""
+    tm = max(bs, (min(256, M) // bs) * bs)
+    tk = max(bc, (min(512, K) // bc) * bc)
+    return tm, tk
+
+
+def _index_bytes(n_blocks_total: int) -> int:
+    return (n_blocks_total + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# Backend implementations — each maps (x2 (M, K), bs, bc, cfg) -> (y2, aux)
+# ---------------------------------------------------------------------------
+
+def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
+    from ..kernels.zebra_mask import zebra_mask
+    M, K = x2.shape
+    tm, tk = _tile_sizes(M, K, bs, bc)
+    y2, bitmap = zebra_mask(x2, t_obj=cfg.t_obj, bs=bs, bc=bc, tm=tm, tk=tk,
+                            interpret=cfg.interpret)
+    return y2, bitmap, jnp.float32(0.0)
+
+
+def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
+    from ..kernels.pack import zebra_pack, zebra_unpack
+    y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
+    payload, n_live = zebra_pack(y2, bitmap, bs=bs, bc=bc,
+                                 interpret=cfg.interpret)
+    y2 = zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
+    item = jnp.dtype(x2.dtype).itemsize
+    measured = (n_live.astype(jnp.float32) * (bs * bc * item)
+                + _index_bytes(bitmap.size))
+    return y2, bitmap, measured
+
+
+def _run_fused(x2: jax.Array, w: jax.Array, bs: int, bc: int,
+               cfg: ZebraConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """mask + block-skipping GEMM; returns (x' @ w, bitmap, fetched bytes)."""
+    from ..kernels.zebra_spmm import zebra_spmm
+    y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
+    out = zebra_spmm(y2, w, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
+    item = jnp.dtype(x2.dtype).itemsize
+    n_live = jnp.sum(bitmap.astype(jnp.float32))
+    measured = n_live * (bs * bc * item) + _index_bytes(bitmap.size)
+    return out.astype(x2.dtype), bitmap, measured
+
+
+# ---------------------------------------------------------------------------
+# The engine entry point
+# ---------------------------------------------------------------------------
+
+def wants_fused(cfg: ZebraConfig, site: str = "") -> bool:
+    """True when this site should hand its downstream weight to the engine
+    (infer-mode fused dispatch). Train mode always materializes the masked
+    map (reference), so callers keep their dense matmul there."""
+    return (cfg.enabled and cfg.mode != "train"
+            and cfg.backend_for(site) == "fused")
+
+
+def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
+               layout: str = "tokens", tnet: dict | None = None,
+               w: jax.Array | None = None) -> tuple[jax.Array, SiteAux]:
+    """Execute one Zebra activation site through the configured backend.
+
+    x       ``tokens``: (..., S, D) activation map (leading dims = batch);
+            ``nchw``: (B, C, H, W) CNN map.
+    site    name used for per-site backend overrides (cfg.site_backends).
+    tnet    threshold-net params (train mode, reference backend only).
+    w       downstream weight (K, N) — required by the fused backend,
+            which then returns ``mask(x) @ w`` instead of the masked map.
+
+    Returns ``(y, SiteAux)``. Without ``w``, y is the masked map (bitwise
+    identical across reference/pallas/stream). With ``w`` (fused), y is
+    the downstream product with dead blocks skipped.
+    """
+    backend = cfg.backend_for(site)
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown zebra backend {backend!r} "
+                         f"(site={site!r}); expected one of {BACKENDS}")
+    if w is not None and backend != "fused":
+        raise ValueError("w is only consumed by the fused backend; apply "
+                         "the downstream matmul at the call site instead")
+    if not cfg.enabled:
+        return (x if w is None else x @ w), SiteAux.empty()
+    if cfg.mode == "train":
+        backend = "reference"           # gradients + threshold nets are jnp
+                                        # (w degrades to a dense matmul there)
+
+    # ---- layout -> 2-D tile grid + effective blocks -----------------------
+    if layout == "nchw":
+        B, C, H, W = x.shape
+        b = site_block(H, W, cfg.block_hw)
+        cfg = cfg.replace(block_hw=b)
+        bs = bc = b
+        dims = (B * C * H, W)
+        nb_sample = C * (H // b) * (W // b)
+        degenerate = False
+    elif layout == "tokens":
+        if x.ndim == 2:                 # bare (M, K) map: one-sample batch
+            y, aux = zebra_site(x[None], cfg, site=site, layout=layout,
+                                tnet=tnet, w=w)
+            return y[0], aux
+        bs, bc, degenerate = _tokens_blocks(x, cfg)
+        cfg = cfg.replace(block_seq=bs, block_ch=bc)
+        S, D = x.shape[-2], x.shape[-1]
+        dims = (x.size // D, D)
+        nb_sample = (S // bs) * (D // bc)
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+
+    if backend != "reference" and degenerate:
+        backend = "reference"           # 1-row decode tiles: nothing to skip
+
+    # ---- reference: the jnp path (train semantics live here) --------------
+    if backend == "reference":
+        fn = zebra_cnn if layout == "nchw" else zebra_tokens
+        y, aux = fn(x, cfg, tnet)
+        if w is not None:               # fused request degraded to reference
+            y = y @ w
+        return y, SiteAux(reg=aux["reg"], zero_frac=aux["zero_frac"],
+                          measured_bytes=jnp.float32(0.0),
+                          n_blocks=aux["n_blocks"],
+                          thresholds=aux["thresholds"], backend="reference")
+
+    # ---- kernel backends on the flattened (M, K) grid ---------------------
+    x2 = x.reshape(dims)
+    if backend == "pallas":
+        y2, bitmap, measured = _run_pallas(x2, bs, bc, cfg)
+        y = y2.reshape(x.shape)
+    elif backend == "stream":
+        y2, bitmap, measured = _run_stream(x2, bs, bc, cfg)
+        y = y2.reshape(x.shape)
+    else:  # fused
+        if w is None:                   # no downstream weight: mask-only
+            y2, bitmap, measured = _run_pallas(x2, bs, bc, cfg)
+            y = y2.reshape(x.shape)
+        else:
+            y2, bitmap, measured = _run_fused(x2, w, bs, bc, cfg)
+            y = y2.reshape(*x.shape[:-1], w.shape[-1])
+    zero_frac = 1.0 - jnp.mean(bitmap.astype(jnp.float32))
+    return y, SiteAux(reg=jnp.float32(0.0), zero_frac=zero_frac,
+                      measured_bytes=measured, n_blocks=nb_sample,
+                      thresholds=None, backend=backend)

@@ -44,9 +44,17 @@ class ZebraConfig:
     grad_mode: str = "hard"      # "hard" (paper) | "ste" | "soft"
     soft_temp: float = 0.05
     act_bits: int = 16           # B in Eq. 2 (bf16 activations on TPU)
+    # --- site-engine execution (core.engine) ---
+    backend: str = "reference"   # reference | pallas | stream | fused
+    site_backends: tuple[tuple[str, str], ...] = ()  # per-site overrides
+    interpret: bool = True       # Pallas interpret mode (CPU containers)
 
     def replace(self, **kw) -> "ZebraConfig":
         return dataclasses.replace(self, **kw)
+
+    def backend_for(self, site: str = "") -> str:
+        """Resolve the execution backend for one named site."""
+        return dict(self.site_backends).get(site, self.backend) or "reference"
 
 
 # ---------------------------------------------------------------------------
@@ -189,8 +197,15 @@ def zebra_tokens(x: jax.Array, cfg: ZebraConfig, tnet: dict | None = None) -> tu
 
 
 def zebra_infer_bitmap_nchw(x: jax.Array, cfg: ZebraConfig) -> tuple[jax.Array, jax.Array]:
-    """Inference helper: (masked x, keep-bitmap) for hardware-style storage."""
+    """Inference helper: (masked x, keep-bitmap) for hardware-style storage.
+
+    Like ``zebra_cnn``, ``cfg.enabled=False`` is a passthrough: x unchanged,
+    every block kept (all-ones bitmap).
+    """
     b = cfg.block_hw
+    B, C, H, W = x.shape
+    if not cfg.enabled:
+        return x, jnp.ones((B, C, H // b, W // b), bool)
     blockmax = _block_reduce_max_nchw(x, b)
     keep = blockmax >= jnp.asarray(cfg.t_obj, blockmax.dtype)
     y = x * _expand_mask_nchw(keep, b).astype(x.dtype)
@@ -199,6 +214,9 @@ def zebra_infer_bitmap_nchw(x: jax.Array, cfg: ZebraConfig) -> tuple[jax.Array, 
 
 def zebra_infer_bitmap_tokens(x: jax.Array, cfg: ZebraConfig) -> tuple[jax.Array, jax.Array]:
     bs, bc = cfg.block_seq, cfg.block_ch
+    B, S, D = x.shape
+    if not cfg.enabled:
+        return x, jnp.ones((B, S // bs, D // bc), bool)
     blockmax = _block_reduce_max_bsd(x, bs, bc)
     keep = blockmax >= jnp.asarray(cfg.t_obj, blockmax.dtype)
     y = x * _expand_mask_bsd(keep, bs, bc).astype(x.dtype)

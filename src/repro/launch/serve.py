@@ -19,7 +19,7 @@ from ..data import LMDatasetConfig, lm_batch
 from ..distributed import sharding as shd
 from ..models.lm import LM
 from .mesh import make_host_mesh
-from .steps import make_decode_step, make_prefill
+from .steps import make_generate, make_prefill
 
 
 def main() -> None:
@@ -33,16 +33,20 @@ def main() -> None:
     ap.add_argument("--t-obj", type=float, default=0.1)
     ap.add_argument("--greedy", action="store_true", default=True)
     ap.add_argument("--use-kernel", action="store_true",
-                    help="run Zebra sites through the Pallas comparator + "
-                         "pack/unpack kernels and transport the prefill->"
-                         "decode KV caches in compressed form, with "
-                         "measured-bytes accounting")
+                    help="legacy alias for --backend stream (compressed "
+                         "activation transport + measured-bytes accounting)")
+    ap.add_argument("--backend", default="",
+                    choices=["", "reference", "pallas", "stream", "fused"],
+                    help="Zebra site-engine backend for every activation "
+                         "site (core.engine); stream/fused also transport "
+                         "the prefill->decode KV caches compressed")
     args = ap.parse_args()
 
+    backend = args.backend or ("stream" if args.use_kernel else "")
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     cfg = cfg.replace(param_dtype="bfloat16",
                       zebra_sites=tuple(cfg.zebra_sites) + ("kv_cache",),
-                      zebra_t_obj=args.t_obj, use_kernel=args.use_kernel)
+                      zebra_t_obj=args.t_obj, zebra_backend=backend)
     mesh = make_host_mesh(model=args.model_parallel)
     model = LM(cfg)
 
@@ -53,7 +57,10 @@ def main() -> None:
     params = jax.device_put(params, pshard)
 
     prefill = jax.jit(make_prefill(model, mesh), static_argnames=())
-    decode = jax.jit(make_decode_step(model, mesh), donate_argnums=(2,))
+    # whole-generation lax.scan: ONE dispatch for gen-1 tokens (steps.py);
+    # length-0 scan at --gen 1 costs nothing
+    generate = jax.jit(make_generate(model, mesh, max(args.gen - 1, 0)),
+                       donate_argnums=(2,))
 
     ds = LMDatasetConfig(vocab=cfg.vocab)
     B, S = args.batch, args.prompt_len
@@ -70,25 +77,35 @@ def main() -> None:
         logits, state, aux = jax.block_until_ready(
             model_prefill_pad(prefill, params, prompts, cache_len))
     t_pref = time.time() - t0
-    kv_zero_frac = float(aux[1] / max(float(aux[2]), 1.0))
-    if args.use_kernel:
+    # named SiteAux/LayerAux fields; zero_frac guards the n_blocks == 0
+    # (no block-divisible site) case internally
+    n_blocks = float(aux.n_blocks)
+    zebra_zero_frac = float(aux.zero_frac)
+    measured_bytes = float(aux.measured_bytes)
+    if backend in ("stream", "fused"):
         state = transport_state_compressed(state, cfg)
-    tok = jnp.argmax(logits, axis=-1)[:, None]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
 
-    out = [tok]
     t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, state = decode(params, tok, state, jnp.int32(S + i))
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
+    toks, state = generate(params, tok, state, jnp.int32(S))
+    jax.block_until_ready(toks)
     t_dec = time.time() - t0
-    gen = np.asarray(jnp.concatenate(out, axis=1))
+    gen = np.asarray(jnp.concatenate([tok, toks], axis=1))[:, :args.gen]
     print(f"[serve] {cfg.name} batch={B} prompt={S} gen={args.gen}")
     print(f"  prefill: {t_pref*1e3:.1f} ms  decode: "
-          f"{t_dec/max(args.gen-1,1)*1e3:.2f} ms/token")
-    print(f"  zebra kv-cache zero-block fraction: {kv_zero_frac:.3f} "
-          f"(cache-read traffic cut by that fraction)")
+          f"{t_dec/max(args.gen-1,1)*1e3:.2f} ms/token (single scan dispatch)")
+    if n_blocks > 0:
+        # block-weighted mean over every prefill Zebra site (ffn_hidden +
+        # kv_cache); the kv-cache-only traffic cut is the TOTAL line of the
+        # per-leaf transport report above when --backend stream/fused is on
+        print(f"  zebra zero-block fraction, all prefill sites: "
+              f"{zebra_zero_frac:.3f}")
+    else:
+        print("  zebra: no block-divisible site this shape — zero-block "
+              "fraction n/a")
+    if measured_bytes > 0:
+        print(f"  zebra in-model transport: {measured_bytes/1e6:.3f} MB "
+              f"measured compressed stream bytes (prefill sites)")
     print("  sample continuation:", gen[0, :16].tolist())
 
 

@@ -141,6 +141,27 @@ def make_decode_step(model: LM, mesh):
     return decode_step
 
 
+def make_generate(model: LM, mesh, steps: int):
+    """Whole-generation greedy decode as ONE jitted ``lax.scan`` over the
+    decode step — a single dispatch for ``steps`` tokens instead of one
+    Python-loop dispatch per token.
+
+    generate(params, tok0 (B,1), state, pos0) -> (tokens (B, steps), state)
+    """
+    def generate(params, tok0, state, pos0):
+        with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
+            def body(carry, i):
+                tok, st = carry
+                logits, st = model.decode_step(params, tok, st, pos0 + i)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                return (nxt, st), nxt
+
+            (_, state_out), toks = jax.lax.scan(
+                body, (tok0, state), jnp.arange(steps, dtype=jnp.int32))
+            return jnp.moveaxis(toks[..., 0], 0, 1), state_out
+    return generate
+
+
 # ---------------------------------------------------------------------------
 # Cell builder (arch x shape x mesh)
 # ---------------------------------------------------------------------------

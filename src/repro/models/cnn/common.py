@@ -16,23 +16,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.zebra import ZebraConfig, init_threshold_net, zebra_cnn
+from ...core.engine import SiteAux, site_block, zebra_site
+from ...core.zebra import ZebraConfig, init_threshold_net
 from ...core.bandwidth import MapSpec
 
 
-def site_block(h: int, w: int, want: int) -> int:
-    b = min(want, h, w)
-    while h % b or w % b:
-        b -= 1
-    return max(b, 1)
-
-
 class ZebraSites:
-    """Collects threshold nets at init and auxes at apply time."""
+    """Collects threshold nets at init and auxes at apply time. Every site
+    executes through the unified engine (``core.engine.zebra_site``), so
+    ``zcfg.backend`` picks reference | pallas | stream per forward — with
+    ``stream``, CNN maps move in compressed (bitmap, payload) form and each
+    ``SiteAux.measured_bytes`` reports the observed stream length."""
 
     def __init__(self, zcfg: ZebraConfig):
         self.zcfg = zcfg
-        self.auxes: list = []
+        self.auxes: list[SiteAux] = []
         self.specs: list[MapSpec] = []
         self._tnets: dict = {}
         self._i = 0
@@ -53,7 +51,7 @@ class ZebraSites:
         tnet = zebra_params.get(name) if zebra_params else None
         if cfg.mode == "train" and tnet is None:
             cfg = cfg.replace(enabled=False)   # site without a net: passthrough
-        y, aux = zebra_cnn(x, cfg, tnet)
+        y, aux = zebra_site(x, cfg, site=name, layout="nchw", tnet=tnet)
         self.auxes.append(aux)
         self.specs.append(MapSpec(c=C, h=H, w=W, bits=cfg.act_bits, block=b))
         return y

@@ -209,6 +209,32 @@ def attend_local_scanned(q, k, v, *, window: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Zebra kv_cache site (beyond-paper): block-compress K/V at the HBM write
+# ---------------------------------------------------------------------------
+
+def zebra_kv_site(k: jax.Array, v: jax.Array, zc) -> tuple[jax.Array, jax.Array, list]:
+    """Apply the engine's ``kv_cache`` Zebra site to freshly-computed K/V
+    ``(B, S, Hkv, hd)`` before they are written to the cache. Heads fold
+    onto the channel axis so the (block_seq, block_ch) tiles match how the
+    cache is actually laid out (and transported — serve.py moves the
+    prefill->decode handoff in exactly this block form).
+
+    Returns (k', v', [SiteAux_k, SiteAux_v]).
+    """
+    from ...core.engine import zebra_site
+
+    B, S = k.shape[0], k.shape[1]
+    auxes = []
+    out = []
+    for t in (k, v):
+        tf = t.reshape(B, S, -1)
+        tz, aux = zebra_site(tf, zc, site="kv_cache", layout="tokens")
+        out.append(tz.reshape(t.shape))
+        auxes.append(aux)
+    return out[0], out[1], auxes
+
+
+# ---------------------------------------------------------------------------
 # Decode (single query token vs cache)
 # ---------------------------------------------------------------------------
 

@@ -5,8 +5,10 @@ global). Layers are grouped into runs: ``n_layers // P`` stacked
 superlayers executed under ``jax.lax.scan`` (small HLO, fast compiles,
 XLA pipelines the per-layer collectives), plus one unrolled remainder.
 
-Every layer returns an aux 4-vector (zebra_reg, zero_frac·n_blocks,
-n_blocks, router_aux) accumulated in the scan carry.
+Every layer returns a ``core.engine.LayerAux`` (named-field scan carry:
+zebra reg, weighted zero_frac, block counts, measured transport bytes,
+router aux) accumulated across the scan. All Zebra sites execute through
+the unified engine; this module contains no direct masking/kernel calls.
 """
 from __future__ import annotations
 
@@ -18,7 +20,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from ..layers import lecun_normal, layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
-from ...core.zebra import init_token_threshold_net, zebra_tokens
+from ...core.engine import LayerAux, zebra_site
+from ...core.zebra import init_token_threshold_net
 from ...distributed.ctx import hint_tokens
 from . import attention as attn
 from .config import LMConfig
@@ -27,16 +30,11 @@ from .rglru import rglru_apply, rglru_decode_step, rglru_init, rglru_init_cache
 from .ssm import (ssm_apply, ssm_decode_step, ssm_init, ssm_init_cache,
                   ssm_prefill_state)
 
-Aux = jax.Array  # (4,) f32: [zebra_reg, zf*nblocks, nblocks, router_aux]
+Aux = LayerAux
 
 
 def zero_aux() -> Aux:
-    return jnp.zeros((4,), jnp.float32)
-
-
-def _pack_aux(zaux, raux=0.0) -> Aux:
-    reg, zf, nb = zaux
-    return jnp.stack([reg, zf * nb, nb, jnp.float32(raux)])
+    return LayerAux.zero()
 
 
 def _norm_init(cfg, d=None):
@@ -144,16 +142,10 @@ def _enc_kv(p, enc_out, cfg: LMConfig):
 
 
 def _layer_out_zebra(p, x, cfg: LMConfig, mode: str):
-    if not (cfg.zebra_enabled and "layer_out" in cfg.zebra_sites):
-        return x, (jnp.float32(0), jnp.float32(0), jnp.float32(0))
-    from .ffn import eff_block_ch
     zc = zebra_cfg_for(cfg, mode)
-    B, S, D = x.shape
-    bs = zc.block_seq if S % zc.block_seq == 0 else 1
-    bc = eff_block_ch(D, cfg)
-    y, aux = zebra_tokens(x, zc.replace(block_seq=bs, block_ch=bc),
-                          p.get("zebra_out_tnet"))
-    return y, (aux["reg"], aux["zero_frac"], jnp.float32(aux["n_blocks"]))
+    if "layer_out" not in cfg.zebra_sites:
+        zc = zc.replace(enabled=False)
+    return zebra_site(x, zc, site="layer_out", tnet=p.get("zebra_out_tnet"))
 
 
 def apply_layer(p, x, typ: str, cfg: LMConfig, mode: str, rope,
@@ -173,18 +165,18 @@ def apply_layer(p, x, typ: str, cfg: LMConfig, mode: str, rope,
     if "ffn" in p or "moe" in p:
         h2 = _norm_apply(cfg, p["norm2"], x)
         if "moe" in p:
-            y, zaux, raux = _moe(p["moe"], h2, cfg, mode)
-            aux = aux + _pack_aux(zaux, raux)
+            y, moe_aux = _moe(p["moe"], h2, cfg, mode)
+            aux = aux + moe_aux
         else:
             y, zaux = ffn_apply(p["ffn"], h2, cfg, mode)
-            aux = aux + _pack_aux(zaux)
+            aux = aux + LayerAux.of_site(zaux)
         x = x + y
     x, zo = _layer_out_zebra(p, x, cfg, mode)
-    aux = aux + _pack_aux(zo)
+    aux = aux + LayerAux.of_site(zo)
     return x, aux
 
 
-def _moe(p, h2, cfg: LMConfig, mode: str):
+def _moe(p, h2, cfg: LMConfig, mode: str) -> tuple[jax.Array, LayerAux]:
     """Route to the shard_map'd pure-DP dispatch when the profile asks for
     it and a mesh context is live; plain SPMD dispatch otherwise."""
     if cfg.sharding_profile == "dp":
@@ -193,7 +185,8 @@ def _moe(p, h2, cfg: LMConfig, mode: str):
         if mesh is not None:
             from .ffn import moe_apply_dp
             return moe_apply_dp(p, h2, cfg, mode, mesh, tuple(dp_axes()))
-    return moe_apply(p, h2, cfg, mode)
+    y, zaux, raux = moe_apply(p, h2, cfg, mode)
+    return y, LayerAux.of_site(zaux, raux)
 
 
 # ---------------------------------------------------------------------------
@@ -268,20 +261,9 @@ def apply_layer_prefill(p, x, typ: str, cfg: LMConfig, rope, cache_len: int,
         x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
         if cfg.zebra_enabled and "kv_cache" in cfg.zebra_sites:
             # beyond-paper: Zebra block-compress the cache at the HBM write
-            zc = zebra_cfg_for(cfg, "infer")
-            kf = k.reshape(B, S, -1)
-            vf = v.reshape(B, S, -1)
-            bs = zc.block_seq if S % zc.block_seq == 0 else 1
-            bc = zc.block_ch if kf.shape[-1] % zc.block_ch == 0 else kf.shape[-1]
-            zc = zc.replace(block_seq=bs, block_ch=bc)
-            kz, kaux = zebra_tokens(kf, zc)
-            vz, vaux = zebra_tokens(vf, zc)
-            k = kz.reshape(k.shape)
-            v = vz.reshape(v.shape)
-            aux = aux + _pack_aux((kaux["reg"], kaux["zero_frac"],
-                                   jnp.float32(kaux["n_blocks"])))
-            aux = aux + _pack_aux((vaux["reg"], vaux["zero_frac"],
-                                   jnp.float32(vaux["n_blocks"])))
+            k, v, kv_auxes = attn.zebra_kv_site(k, v, zebra_cfg_for(cfg, "infer"))
+            for a in kv_auxes:
+                aux = aux + LayerAux.of_site(a)
         if typ == "local":
             T = min(cfg.window, cache_len)
             cache = {"k": k[:, -T:].astype(x.dtype), "v": v[:, -T:].astype(x.dtype)}
@@ -320,11 +302,11 @@ def apply_layer_prefill(p, x, typ: str, cfg: LMConfig, rope, cache_len: int,
         h2 = _norm_apply(cfg, p["norm2"], x)
         if "moe" in p:
             y, zaux, raux = moe_apply(p["moe"], h2, cfg, "infer")
-            aux = aux + _pack_aux(zaux, raux)
+            aux = aux + LayerAux.of_site(zaux, raux)
         else:
             y, zaux = ffn_apply(p["ffn"], h2, cfg, "infer")
-            aux = aux + _pack_aux(zaux)
+            aux = aux + LayerAux.of_site(zaux)
         x = x + y
     x, zo = _layer_out_zebra(p, x, cfg, "infer")
-    aux = aux + _pack_aux(zo)
+    aux = aux + LayerAux.of_site(zo)
     return x, cache, aux

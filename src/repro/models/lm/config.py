@@ -72,9 +72,16 @@ class LMConfig:
     zebra_block_seq: int = 8
     zebra_block_ch: int = 128
     zebra_sites: tuple[str, ...] = ("ffn_hidden",)  # +"layer_out", +"kv_cache"
-    use_kernel: bool = False         # inference Zebra sites run the Pallas
-                                     # comparator + pack/unpack transport
-                                     # (materializes the compressed stream)
+    use_kernel: bool = False         # legacy switch == zebra_backend="stream"
+                                     # (comparator + pack/unpack transport)
+    zebra_backend: str = ""          # engine backend for every Zebra site:
+                                     # reference | pallas | stream | fused
+                                     # ("" = stream if use_kernel else
+                                     # reference); train mode always runs
+                                     # reference (core.engine)
+    zebra_site_backends: tuple[tuple[str, str], ...] = ()
+                                     # per-site overrides, e.g.
+                                     # (("kv_cache", "stream"),)
 
     def __post_init__(self):
         if self.head_dim == 0:

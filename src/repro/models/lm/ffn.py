@@ -1,22 +1,28 @@
 """FFN blocks: dense (SwiGLU / GELU) and MoE (top-k, sort-based dispatch),
 each with a Zebra site on the hidden activation map — the LM integration of
-the paper's technique (DESIGN.md §4).
+the paper's technique (DESIGN.md §4). All sites execute through the
+unified engine (``core.engine.zebra_site``); the dense FFN additionally
+supports the ``fused`` backend, where ``w_down`` consumes the keep bitmap
+via ``zebra_spmm`` instead of a dense re-matmul over the masked map.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ...core.zebra import ZebraConfig, init_token_threshold_net, zebra_tokens
+from ...core.engine import wants_fused, zebra_site
+from ...core.zebra import ZebraConfig, init_token_threshold_net
 from ...distributed.ctx import dp_axes, hint, hint_tokens, tp_axis
 from ..layers import lecun_normal
 from .config import LMConfig
 
 
 def zebra_cfg_for(cfg: LMConfig, mode: str) -> ZebraConfig:
+    backend = cfg.zebra_backend or ("stream" if cfg.use_kernel else "reference")
     return ZebraConfig(enabled=cfg.zebra_enabled, t_obj=cfg.zebra_t_obj,
                        block_seq=cfg.zebra_block_seq, block_ch=cfg.zebra_block_ch,
-                       mode=mode)
+                       mode=mode, backend=backend,
+                       site_backends=tuple(cfg.zebra_site_backends))
 
 
 def eff_block_ch(f: int, cfg: LMConfig) -> int:
@@ -25,28 +31,11 @@ def eff_block_ch(f: int, cfg: LMConfig) -> int:
     return cfg.zebra_block_ch if f % cfg.zebra_block_ch == 0 else f
 
 
-def _zebra_site(h: jax.Array, cfg: LMConfig, tnet, mode: str):
-    """h: (B, S, F). Returns (h', (reg, zero_frac, n_blocks))."""
-    if not cfg.zebra_enabled or "ffn_hidden" not in cfg.zebra_sites:
-        return h, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+def _hidden_site_cfg(cfg: LMConfig, mode: str) -> ZebraConfig:
     zc = zebra_cfg_for(cfg, mode)
-    B, S, F = h.shape
-    bs = zc.block_seq if S % zc.block_seq == 0 else 1
-    bc = eff_block_ch(F, cfg)
-    zc = zc.replace(block_seq=bs, block_ch=bc)
-    if cfg.use_kernel and mode == "infer" and bs == cfg.zebra_block_seq:
-        # Pallas comparator + pack/unpack round trip: the hidden map is
-        # moved in compressed (bitmap, payload) form, not just masked.
-        # (Decode's S=1 fallback tiles stay on the jnp path.)
-        from ...compress.stream import transport_tokens
-        y, bitmap = transport_tokens(h.reshape(B * S, F), zc.t_obj,
-                                     bs=bs, bc=bc)
-        nb = jnp.float32(bitmap.size // B)      # per-sample, like zebra_tokens
-        zero_frac = 1.0 - jnp.mean(bitmap.astype(jnp.float32))
-        return y.reshape(B, S, F), (jnp.float32(0.0), zero_frac, nb)
-    y, aux = zebra_tokens(h, zc, tnet)
-    nb = jnp.float32(aux["n_blocks"])
-    return y, (aux["reg"], aux["zero_frac"], nb)
+    if "ffn_hidden" not in cfg.zebra_sites:
+        zc = zc.replace(enabled=False)
+    return zc
 
 
 # ---------------------------------------------------------------------------
@@ -77,10 +66,17 @@ def ffn_apply(p, x, cfg: LMConfig, mode: str):
     else:
         h = jax.nn.gelu(x @ p["w_up"].astype(cdt) + p["b_up"].astype(cdt))
     h = hint_tokens(h, "model")           # hidden map d_ff TP-sharded
-    h, zaux = _zebra_site(h, cfg, p.get("zebra_tnet"), mode)
-    from jax.ad_checkpoint import checkpoint_name
-    h = checkpoint_name(h, "ffn_hidden")  # save_acts remat
-    y = h @ p["w_down"].astype(cdt)
+    zc = _hidden_site_cfg(cfg, mode)
+    if mode == "infer" and wants_fused(zc, "ffn_hidden"):
+        # fused backend: w_down consumes the keep bitmap (zebra_spmm skips
+        # dead blocks) — the masked hidden map is never re-read densely.
+        y, zaux = zebra_site(h, zc, site="ffn_hidden",
+                             w=p["w_down"].astype(cdt))
+    else:
+        h, zaux = zebra_site(h, zc, site="ffn_hidden", tnet=p.get("zebra_tnet"))
+        from jax.ad_checkpoint import checkpoint_name
+        h = checkpoint_name(h, "ffn_hidden")  # save_acts remat
+        y = h @ p["w_down"].astype(cdt)
     if "b_down" in p:
         y = y + p["b_down"].astype(cdt)
     return y, zaux
@@ -113,7 +109,7 @@ def moe_apply(p, x, cfg: LMConfig, mode: str, local: bool = False):
       the E axis shards over "model" = expert parallelism) -> gather back.
 
     Overflow tokens beyond capacity C are dropped (their combine weight is
-    effectively 0 — GShard semantics). Returns (y, zebra_aux, router_aux).
+    effectively 0 — GShard semantics). Returns (y, SiteAux, router_aux).
     """
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
@@ -149,7 +145,8 @@ def moe_apply(p, x, cfg: LMConfig, mode: str, local: bool = False):
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["w_gate"].astype(cdt))) \
         * jnp.einsum("ecd,edf->ecf", eb, p["w_up"].astype(cdt))
     h2d = h.reshape(E * cap, cfg.d_ff)
-    hz, zaux = _zebra_site(h2d[None], cfg, p.get("zebra_tnet"), mode)
+    hz, zaux = zebra_site(h2d[None], _hidden_site_cfg(cfg, mode),
+                          site="ffn_hidden", tnet=p.get("zebra_tnet"))
     h = hz[0].reshape(E, cap, cfg.d_ff)
     y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cdt))
 
@@ -167,20 +164,28 @@ def moe_apply_dp(p, x, cfg: LMConfig, mode: str, mesh, dp_axes_t: tuple):
     axes — every device routes/dispatches only its LOCAL tokens against a
     replicated (FSDP-gathered) expert stack. Zero expert-parallel
     communication; capacity is per-shard, so the dispatch buffer is
-    1/n_shards the global one."""
+    1/n_shards the global one. Returns (y, LayerAux): reg/zero_frac are
+    shard means, measured bytes are summed (each shard moves its own
+    stream)."""
     import jax as _jax
     from jax.sharding import PartitionSpec as P
 
-    def local_fn(p_, x_):
-        y, zaux, raux = moe_apply(p_, x_, cfg, mode, local=True)
-        red = lambda s: _jax.lax.pmean(s, dp_axes_t)
-        reg, zf, nb = zaux
-        return y, red(reg), red(zf), nb, red(raux)
+    from ...core.engine import LayerAux
 
-    y, reg, zf, nb, raux = _jax.shard_map(
+    def local_fn(p_, x_):
+        y, sa, raux = moe_apply(p_, x_, cfg, mode, local=True)
+        mean = lambda s: _jax.lax.pmean(s, dp_axes_t)
+        tot = lambda s: _jax.lax.psum(s, dp_axes_t)
+        nb = jnp.float32(sa.n_blocks)
+        return (y, mean(jnp.float32(sa.reg)),
+                mean(jnp.float32(sa.zero_frac) * nb), nb,
+                tot(jnp.float32(sa.measured_bytes)), mean(raux))
+
+    y, reg, zfb, nb, mb, raux = _jax.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), P(dp_axes_t, None, None)),
-        out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P()),
+        out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P(), P()),
         check_vma=False,
     )(p, x)
-    return y, (reg, zf, nb), raux
+    return y, LayerAux(reg=reg, zf_blocks=zfb, n_blocks=nb,
+                       measured_bytes=mb, router_aux=raux)

@@ -189,8 +189,8 @@ class LM:
             lp = jax.nn.log_softmax(logits, axis=-1)
             ce = -jnp.mean(jnp.take_along_axis(lp, lbl[..., None], axis=-1))
 
-        zreg, zfnb, nb, raux = aux[0], aux[1], aux[2], aux[3]
-        zero_frac = zfnb / jnp.maximum(nb, 1.0)
+        zreg, raux = aux.reg, aux.router_aux
+        zero_frac = aux.zero_frac        # block-weighted, div-by-zero guarded
         total = cfg.zebra_t_obj * 0 + ce + zreg   # λ=1 fold; reg already summed
         if cfg.is_moe:
             total = total + cfg.router_aux_coef * raux

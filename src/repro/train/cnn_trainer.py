@@ -107,7 +107,11 @@ class CNNTrainer:
                 "top5": topk_accuracy(logits, labels, k=5),
                 "ce": cross_entropy(logits, labels),
                 "zero_frac": mean_zero_frac(auxes),
-                "zero_fracs": jnp.stack([a["zero_frac"] for a in auxes])}
+                "zero_fracs": jnp.stack([a["zero_frac"] for a in auxes]),
+                # observed stream bytes per forward (site engine; nonzero
+                # only for the stream/fused backends)
+                "measured_bytes": jnp.sum(jnp.stack(
+                    [jnp.float32(a["measured_bytes"]) for a in auxes]))}
 
     # ------------------------------------------------------------------
     def train(self, steps: int | None = None, log_every: int = 50,
@@ -133,7 +137,7 @@ class CNNTrainer:
     # ------------------------------------------------------------------
     def evaluate(self, variables, batches: int = 8, batch: int = 128, seed: int = 10_000):
         cfg = self.cfg
-        accs, top5s, zfs, per_site = [], [], [], []
+        accs, top5s, zfs, per_site, mbytes = [], [], [], [], []
         for i in range(batches):
             images, labels = image_batch(cfg.dataset, batch, seed + i)
             out = self._eval_step(variables, images, labels)
@@ -141,12 +145,14 @@ class CNNTrainer:
             top5s.append(float(out["top5"]))
             zfs.append(float(out["zero_frac"]))
             per_site.append(np.asarray(out["zero_fracs"]))
+            mbytes.append(float(out["measured_bytes"]))
         specs = self.model.map_specs(cfg.dataset.hw, cfg.zebra)
         site_zf = np.mean(np.stack(per_site), axis=0)
         bw = reduced_bandwidth_pct(specs, list(site_zf))
         return {"acc": float(np.mean(accs)), "top5": float(np.mean(top5s)),
                 "zero_frac": float(np.mean(zfs)), "reduced_bandwidth_pct": bw,
-                "site_zero_fracs": site_zf}
+                "site_zero_fracs": site_zf,
+                "measured_bytes": float(np.mean(mbytes))}
 
     # ------------------------------------------------------------------
     # Partner-method hooks (paper §III.A)

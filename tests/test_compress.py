@@ -274,5 +274,7 @@ def test_ffn_use_kernel_transport_matches_jnp_site():
     y1, aux1 = ffn_apply(p, x, cfg.replace(use_kernel=True), "infer")
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
                                rtol=1e-6, atol=1e-6)
-    assert np.isclose(float(aux0[1]), float(aux1[1]))   # zero_frac agrees
-    assert float(aux0[2]) == float(aux1[2])             # n_blocks agrees
+    # named SiteAux fields (site engine): zero_frac and n_blocks agree
+    assert np.isclose(float(aux0.zero_frac), float(aux1.zero_frac))
+    assert float(aux0.n_blocks) == float(aux1.n_blocks)
+    assert aux0.backend == "reference" and aux1.backend == "stream"
