@@ -22,14 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.compress import BandwidthMeter, compress, decompress
+from repro.compress import BandwidthMeter, compress_masked, decompress
 from repro.core import reduced_bandwidth_pct, stored_bits
 from repro.kernels import zebra_mask_op
 
 try:
-    from .common import timeit
+    from .common import emit, timeit
 except ImportError:                     # direct script run (CI smoke)
-    from common import timeit
+    from common import emit, timeit
 
 # reduced-width archs whose d_ff is lane-aligned (K % 128 == 0)
 ARCHS = ("gemma3-4b", "recurrentgemma-2b", "starcoder2-15b")
@@ -111,12 +111,13 @@ def run(smoke: bool = False, dtype=jnp.bfloat16):
         key = jax.random.PRNGKey(zlib.crc32(arch.encode()) & 0xFFFF)
         x = _blocky_map(key, M, K, bs, bc, dtype)
         for t in sweep:
-            y, bm = zebra_mask_op(x, t, bs=bs, bc=bc)
-            cm = compress(y, bm, bs=bs, bc=bc)
+            y, _ = zebra_mask_op(x, t, bs=bs, bc=bc)
+            # single-pass producer: raw map -> stream in one launch
+            cm = compress_masked(x, t, bs=bs, bc=bc)
             np.testing.assert_array_equal(          # transport is lossless
                 np.asarray(decompress(cm)), np.asarray(y))
             r = meter.record(f"{arch}/t_obj={t:g}", cm)
-            us = timeit(lambda: compress(y, bm, bs=bs, bc=bc).payload,
+            us = timeit(lambda: compress_masked(x, t, bs=bs, bc=bc).payload,
                         iters=1 if smoke else 3, warmup=1)
             spec = cm.spec()
             rows.append({
@@ -133,10 +134,7 @@ def run(smoke: bool = False, dtype=jnp.bfloat16):
             })
     rec = meter.reconcile()     # raises if any site breaks the padding bound
     rows.extend(run_cnn(smoke))  # NCHW maps through the stream backend
-    for r in rows:
-        derived = ";".join(f"{k}={v}" for k, v in r.items()
-                           if k not in ("name", "us_per_call"))
-        print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+    emit(rows, "bandwidth")     # CSV + BENCH_bandwidth.json in --json mode
     print(f"# reconcile: {rec['n_sites']} maps across {len(archs)} configs, "
           f"max |measured - predicted| = {rec['max_abs_delta_bytes']:.2f} B "
           f"(bound: index padding < 1 B/map)")

@@ -1,11 +1,25 @@
-"""Shared benchmark utilities: timing + tiny-training harness.
+"""Shared benchmark utilities: timing + tiny-training harness + the
+``BENCH_*.json`` perf-trajectory writer.
 
 All paper-table benchmarks train *reduced-width* models on the procedural
 datasets (offline container, DESIGN.md §6) — table structure and trends
 reproduce the paper; absolute accuracies are synthetic-data numbers.
+
+JSON mode (``benchmarks/run.py --json`` -> :func:`set_json_dir`): every
+``emit(rows, name)`` additionally writes ``BENCH_<name>.json`` to the
+configured directory (the repo root in CI) so successive runs accumulate a
+machine-readable perf trajectory. Schema (version 1)::
+
+    {"bench": <name>, "schema_version": 1, "generated_unix": <epoch s>,
+     "rows": [{"name": str, "us_per_call": float, ...derived columns}]}
+
+Every other key of a row dict is a bench-specific derived column (plain
+JSON scalars; numpy/jax values are converted).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -53,10 +67,42 @@ def eval_row(tr, state, budget):
             "zero_frac": round(ev["zero_frac"], 3)}
 
 
+_JSON_DIR: str | None = None
+
+
+def set_json_dir(path: str | None) -> None:
+    """Enable (or disable with None) BENCH_<name>.json emission."""
+    global _JSON_DIR
+    _JSON_DIR = path
+
+
+def _jsonable(v):
+    """Coerce numpy/jax scalars (and containers thereof) to JSON scalars."""
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if hasattr(v, "item") and np.ndim(v) == 0:
+        return v.item()
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
 def emit(rows, name):
-    """Print one benchmark's rows as the required CSV."""
+    """Print one benchmark's rows as the required CSV; in JSON mode also
+    write them as BENCH_<name>.json (the perf-trajectory artifact)."""
     for r in rows:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{r.get('name', name)},{r.get('us_per_call', 0):.1f},{derived}",
               flush=True)
+    if _JSON_DIR is not None:
+        doc = {"bench": name, "schema_version": 1,
+               "generated_unix": int(time.time()),
+               "rows": [{k: _jsonable(v) for k, v in r.items()}
+                        for r in rows]}
+        path = os.path.join(_JSON_DIR, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")

@@ -1,15 +1,43 @@
 """Kernel microbenchmarks (interpret mode on CPU: correctness-grade timing;
 the `derived` column carries the structural numbers that matter on TPU —
-bytes saved per call and MXU-block skip fraction)."""
+bytes saved per call, MXU-block skip fraction, and for the fused-vs-
+composed pairs the Pallas launch count and how many times the dense
+(M, K) map crosses HBM per site).
+
+Fused-vs-composed pairs (the single-pass streaming engine vs the legacy
+multi-launch pipelines; outputs asserted identical here):
+
+  producer   zebra_mask_pack (1 launch, read x once)
+             vs zebra_mask -> zebra_pack (2 launches; the dense masked map
+             is written then re-read: 3 dense crossings)
+  stream     zebra_mask_pack -> zebra_unpack (2 launches, 2 dense crossings)
+             vs zebra_mask -> zebra_pack -> zebra_unpack (3 launches, 4)
+  consumer   zebra_mask_pack -> zebra_spmm_cs (2 launches, the GEMM reads
+             the payload — 1 dense crossing)
+             vs zebra_mask -> zebra_spmm (2 launches, 2 dense crossings)
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import zebra_mask_op, zebra_spmm_op
+from repro.core.engine import stream_bytes
+from repro.kernels import (zebra_mask_op, zebra_mask_pack_op, zebra_pack_op,
+                           zebra_spmm_cs_op, zebra_spmm_op, zebra_unpack_op)
 from repro.kernels import ref
 from .common import emit, timeit
+
+
+def _pair_rows(name, fused_fn, composed_fn, fused_meta, composed_meta,
+               iters=3):
+    t_f = timeit(fused_fn, iters=iters)
+    t_c = timeit(composed_fn, iters=iters)
+    f = {"name": f"kernel/{name}.fused", "us_per_call": t_f,
+         "pair": name, "variant": "fused", **fused_meta}
+    c = {"name": f"kernel/{name}.composed", "us_per_call": t_c,
+         "pair": name, "variant": "composed", **composed_meta}
+    return [f, c]
 
 
 def run(budget=None, quick=True) -> list[dict]:
@@ -37,5 +65,53 @@ def run(budget=None, quick=True) -> list[dict]:
                  "dense_matmul_us": round(t_dense, 1),
                  "mxu_blocks_skipped_frac": round(zf, 3),
                  "flops_skipped": int(zf * 2 * M * K * N)})
+
+    # ---- fused vs composed: the single-pass streaming engine -------------
+    payload_f, bm_f, n_live = zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)
+    payload_c, n_live_c = zebra_pack_op(y, bm, bs=bs, bc=bc)
+    np.testing.assert_array_equal(np.asarray(payload_f), np.asarray(payload_c))
+    assert int(n_live) == int(n_live_c)
+    # the engine's ONE byte-accounting rule, not a private re-derivation
+    dense_b = M * K * jnp.dtype(x.dtype).itemsize
+    stream_b = int(stream_bytes(n_live, bs, bc, x.dtype, bm_f.size))
+
+    rows += _pair_rows(
+        "mask_pack",
+        lambda: zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)[0],
+        lambda: zebra_pack_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
+                              bm, bs=bs, bc=bc)[0],
+        {"launches": 1, "dense_map_hbm_crossings": 1,
+         "dense_bytes_crossed": dense_b, "stream_bytes": stream_b},
+        {"launches": 2, "dense_map_hbm_crossings": 3,
+         "dense_bytes_crossed": 3 * dense_b, "stream_bytes": stream_b})
+
+    y_stream_f = zebra_unpack_op(payload_f, bm_f, bs=bs, bc=bc)
+    np.testing.assert_array_equal(np.asarray(y_stream_f), np.asarray(y))
+    rows += _pair_rows(
+        "stream",
+        lambda: zebra_unpack_op(zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)[0],
+                                bm_f, bs=bs, bc=bc),
+        lambda: zebra_unpack_op(
+            zebra_pack_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
+                          bm, bs=bs, bc=bc)[0], bm, bs=bs, bc=bc),
+        {"launches": 2, "dense_map_hbm_crossings": 2,
+         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b},
+        {"launches": 3, "dense_map_hbm_crossings": 4,
+         "dense_bytes_crossed": 4 * dense_b, "stream_bytes": stream_b})
+
+    y_cs = zebra_spmm_cs_op(payload_f, w, bm_f, bs=bs, bc=bc)
+    y_sp = zebra_spmm_op(y, w, bm, bs=bs, bc=bc)
+    np.testing.assert_array_equal(np.asarray(y_cs), np.asarray(y_sp))
+    rows += _pair_rows(
+        "spmm_cs",
+        lambda: zebra_spmm_cs_op(zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)[0],
+                                 w, bm_f, bs=bs, bc=bc),
+        lambda: zebra_spmm_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
+                              w, bm, bs=bs, bc=bc),
+        {"launches": 2, "dense_map_hbm_crossings": 1,
+         "dense_bytes_crossed": dense_b, "stream_bytes": stream_b},
+        {"launches": 2, "dense_map_hbm_crossings": 2,
+         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b})
+
     emit(rows, "kernels")
     return rows

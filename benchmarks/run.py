@@ -1,6 +1,7 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only table1,table5]
+    PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--json] \
+        [--only table1,table5]
 
 Prints ``name,us_per_call,derived`` CSV per row. Training-based tables use
 reduced-width models on procedural data (offline container); Table V,
@@ -8,15 +9,21 @@ kernels and the roofline table are exact accounting.
 
 ``--smoke`` is the CI mode (scripts/ci.sh): import-check every bench
 module and run the non-training benches (kernels, bandwidth incl. the CNN
-stream reconciliation, roofline, table5) at toy sizes.
+stream reconciliation, roofline, table5) at toy sizes. ``--json``
+additionally writes each bench's rows as ``BENCH_<name>.json`` at the
+repo root (schema: benchmarks/common.py) — the accumulating perf
+trajectory; CI fails if the kernel/bandwidth artifacts are missing or
+malformed.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 SMOKE_BENCHES = ("table5", "kernels", "roofline", "bandwidth")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
@@ -26,6 +33,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI: import-check all benches, run the exact-"
                          "accounting ones (no training) at toy sizes")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per bench at the repo "
+                         "root (perf-trajectory artifacts)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
                          "kernels,roofline,bandwidth")
@@ -35,7 +45,10 @@ def main() -> None:
     from . import (bandwidth_bench, kernel_bench, roofline, table1_zero_blocks,
                    table2_cifar, table3_tinyimagenet, table4_ablation,
                    table5_overhead)
-    from .common import FULL, QUICK
+    from .common import FULL, QUICK, set_json_dir
+
+    if args.json:
+        set_json_dir(REPO_ROOT)
 
     budget = FULL if args.full else QUICK
     quick = not args.full

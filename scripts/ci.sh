@@ -18,6 +18,33 @@ else
     echo "== pip install hypothesis unavailable (offline) — shim run only =="
 fi
 
-echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes) =="
-python -m benchmarks.run --smoke
+echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes; emit BENCH_*.json) =="
+python -m benchmarks.run --smoke --json
+
+echo "== BENCH_*.json perf-trajectory artifacts =="
+python - <<'EOF'
+import json, sys
+
+docs = {}
+for name in ("BENCH_kernels.json", "BENCH_bandwidth.json"):
+    try:
+        with open(name) as f:
+            docs[name] = doc = json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"FAIL: {name} missing (benchmarks/run.py --json did not write it)")
+    except json.JSONDecodeError as e:
+        sys.exit(f"FAIL: {name} is not valid JSON: {e}")
+    for key in ("bench", "schema_version", "generated_unix", "rows"):
+        if key not in doc:
+            sys.exit(f"FAIL: {name} missing key {key!r}")
+    if not doc["rows"] or not all("name" in r and "us_per_call" in r
+                                  for r in doc["rows"]):
+        sys.exit(f"FAIL: {name} rows empty or missing name/us_per_call")
+    print(f"  {name}: {len(doc['rows'])} rows OK")
+fused = [r for r in docs["BENCH_kernels.json"]["rows"]
+         if r.get("variant") == "fused"]
+if not fused:
+    sys.exit("FAIL: BENCH_kernels.json has no fused-vs-composed rows")
+print(f"  BENCH_kernels.json: {len(fused)} fused-variant rows OK")
+EOF
 echo "CI OK"

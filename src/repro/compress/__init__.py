@@ -4,6 +4,7 @@ accounting that reconciles against the Eq. 2/3 analytic predictions."""
 from .stream import (  # noqa: F401
     CompressedMap,
     compress,
+    compress_masked,
     decompress,
     compress_tree,
     decompress_tree,

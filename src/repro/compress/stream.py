@@ -22,8 +22,8 @@ import numpy as np
 
 from ..core.bandwidth import TokenMapSpec
 from ..kernels import ref
+from ..kernels.mask_pack import zebra_mask_pack
 from ..kernels.pack import zebra_pack, zebra_unpack
-from ..kernels.zebra_mask import zebra_mask
 from ..utils import cdiv
 
 
@@ -147,16 +147,32 @@ def decompress(cm: CompressedMap, *, use_kernel: bool = True,
     return x2.reshape(cm.shape)
 
 
-def transport_tokens(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
-                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """The full inference-site round trip: Zebra comparator -> pack ->
-    unpack. Returns (masked map, keep bitmap). Numerically identical to
-    masking alone — but it *materializes* the compressed stream, so the
-    serve path observably moves compressed bytes when use_kernel is on."""
+def compress_masked(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
+                    interpret: bool = True) -> CompressedMap:
+    """Single-pass lossy codec entry: raw (..., K) map -> Zebra-thresholded
+    CompressedMap in ONE producer launch (``zebra_mask_pack``) — the dense
+    masked map is never materialized on the way into the stream."""
     shape = tuple(x.shape)
     x2 = x.reshape(-1, shape[-1])
-    y, bitmap = zebra_mask(x2, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
-    payload, _ = zebra_pack(y, bitmap, bs=bs, bc=bc, interpret=interpret)
+    M, K = x2.shape
+    payload, bitmap, n_live = zebra_mask_pack(x2, t_obj=t_obj, bs=bs, bc=bc,
+                                              interpret=interpret)
+    return CompressedMap(payload=payload, index=pack_bitmap(bitmap),
+                         n_live=n_live, shape=shape, m=M, k=K, bs=bs, bc=bc)
+
+
+def transport_tokens(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
+                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """The full inference-site round trip in single-pass streaming form:
+    ``zebra_mask_pack`` -> ``zebra_unpack`` — TWO launches, only the
+    (payload, bitmap) stream between them. Returns (masked map, keep
+    bitmap). Numerically identical to masking alone — but it
+    *materializes* the compressed stream, so the serve path observably
+    moves compressed bytes when use_kernel is on."""
+    shape = tuple(x.shape)
+    x2 = x.reshape(-1, shape[-1])
+    payload, bitmap, _ = zebra_mask_pack(x2, t_obj=t_obj, bs=bs, bc=bc,
+                                         interpret=interpret)
     y2 = zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=interpret)
     return y2.reshape(shape), bitmap
 

@@ -19,17 +19,21 @@ overrides via ``ZebraConfig.site_backends``):
     computes block maxima, compares against T_obj and zeroes dead blocks.
     Infer only; bitwise-identical to reference.
 ``stream``
-    comparator -> ``zebra_pack`` -> ``zebra_unpack``: the map actually
-    crosses the site in compressed ``(bitmap, payload)`` form and
+    ``zebra_mask_pack`` -> ``zebra_unpack``: TWO launches, with only the
+    compressed ``(payload, bitmap)`` stream between them — the dense
+    masked map is never materialized by the producer.
     ``SiteAux.measured_bytes`` reports the observed stream length
     (payload + packed index, the Eq. 2/3 observable). Numerically
     identical to reference — but the bytes are real.
 ``fused``
-    comparator + ``zebra_spmm``: the downstream matmul consumes the keep
-    bitmap and *skips* dead blocks (dynamic feature-map pruning, Liang et
-    al. 2018 style). Needs the downstream weight ``w``; used by the dense
-    FFN ``w_down``. Reports the same fetched-bytes accounting as stream
-    (live payload + index is exactly what the GEMM reads from HBM).
+    ``zebra_mask_pack`` -> ``zebra_spmm_cs``: TWO launches; the
+    downstream matmul reads live blocks straight from the compressed
+    payload via the bitmap's prefix-sum slot map and *skips* dead
+    K-blocks without ever unpacking (dynamic feature-map pruning, Liang
+    et al. 2018 style). Needs the downstream weight ``w``; used by the
+    dense FFN ``w_down``. Byte accounting is the same ``stream_bytes``
+    helper as stream (live payload + index is exactly what the GEMM
+    fetches from HBM), fed by the producer's ``n_live`` counter.
 
 Layouts. ``tokens`` maps ``(..., S, D)`` tile into ``(block_seq,
 block_ch)`` VMEM blocks. ``nchw`` maps ``(B, C, H, W)`` use the paper's
@@ -195,16 +199,24 @@ def _tokens_blocks(x: jax.Array, cfg: ZebraConfig) -> tuple[int, int, bool]:
     return bs, bc, (bs == 1 and cfg.block_seq > 1)
 
 
-def _tile_sizes(M: int, K: int, bs: int, bc: int) -> tuple[int, int]:
-    """VMEM tile (tm, tk) for the comparator: largest multiple of the block
-    within the default tile, never below one block."""
-    tm = max(bs, (min(256, M) // bs) * bs)
-    tk = max(bc, (min(512, K) // bc) * bc)
-    return tm, tk
-
-
 def _index_bytes(n_blocks_total: int) -> int:
     return (n_blocks_total + 7) // 8
+
+
+def stream_bytes(n_live: jax.Array, bs: int, bc: int, dtype,
+                 n_blocks_total: int) -> jax.Array:
+    """Observed stream length (Eq. 2/3): live payload + packed index.
+
+    The ONE byte-accounting rule shared by every compressed backend —
+    ``n_live`` is the producer kernel's counter output, so stream and
+    fused cannot drift apart in how they reconcile against Eq. 2/3.
+    Integer arithmetic: exact (the sub-1-byte reconciliation bound must
+    hold per site) for payloads up to 2 GiB; float32 would already round
+    above 16 MiB.
+    """
+    item = jnp.dtype(dtype).itemsize
+    return (n_live.astype(jnp.int32) * (bs * bc * item)
+            + _index_bytes(n_blocks_total))
 
 
 # ---------------------------------------------------------------------------
@@ -214,33 +226,61 @@ def _index_bytes(n_blocks_total: int) -> int:
 def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
     from ..kernels.zebra_mask import zebra_mask
     M, K = x2.shape
-    tm, tk = _tile_sizes(M, K, bs, bc)
+    tm, tk = cfg.tiles_for(M, K, bs, bc, x2.dtype)
     y2, bitmap = zebra_mask(x2, t_obj=cfg.t_obj, bs=bs, bc=bc, tm=tm, tk=tk,
                             interpret=cfg.interpret)
     return y2, bitmap, jnp.float32(0.0)
 
 
+def _producer_fits_vmem(x2: jax.Array, cfg: ZebraConfig) -> bool:
+    """zebra_mask_pack keeps the whole worst-case payload (== the map
+    size) VMEM-resident across its grid; maps beyond the budget take the
+    tiled multi-launch pipeline instead."""
+    return x2.size * jnp.dtype(x2.dtype).itemsize <= cfg.vmem_budget_bytes
+
+
+def _mask_pack(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
+    """Single-pass producer: one launch, compressed stream out, the dense
+    masked map never materialized."""
+    from ..kernels.mask_pack import zebra_mask_pack
+    return zebra_mask_pack(x2, t_obj=cfg.t_obj, bs=bs, bc=bc,
+                           interpret=cfg.interpret)
+
+
 def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
+    """mask_pack -> unpack: 2 launches, (payload, bitmap) in between.
+    Over-budget maps degrade to the tiled mask -> pack -> unpack pipeline
+    (3 launches, comparator tiles from cfg.tiles_for) — same stream, same
+    byte accounting, the producer just can't hold the payload in VMEM."""
     from ..kernels.pack import zebra_pack, zebra_unpack
-    y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
-    payload, n_live = zebra_pack(y2, bitmap, bs=bs, bc=bc,
-                                 interpret=cfg.interpret)
+    if _producer_fits_vmem(x2, cfg):
+        payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
+    else:
+        y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
+        payload, n_live = zebra_pack(y2, bitmap, bs=bs, bc=bc,
+                                     interpret=cfg.interpret)
     y2 = zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
-    item = jnp.dtype(x2.dtype).itemsize
-    measured = (n_live.astype(jnp.float32) * (bs * bc * item)
-                + _index_bytes(bitmap.size))
-    return y2, bitmap, measured
+    return y2, bitmap, stream_bytes(n_live, bs, bc, x2.dtype, bitmap.size)
 
 
 def _run_fused(x2: jax.Array, w: jax.Array, bs: int, bc: int,
                cfg: ZebraConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """mask + block-skipping GEMM; returns (x' @ w, bitmap, fetched bytes)."""
-    from ..kernels.zebra_spmm import zebra_spmm
-    y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
-    out = zebra_spmm(y2, w, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
-    item = jnp.dtype(x2.dtype).itemsize
-    n_live = jnp.sum(bitmap.astype(jnp.float32))
-    measured = n_live * (bs * bc * item) + _index_bytes(bitmap.size)
+    """mask_pack -> payload-consuming GEMM: 2 launches, the GEMM reads live
+    blocks straight from the compressed payload (dead K-blocks skipped,
+    never unpacked). Over-budget maps degrade to tiled mask -> zebra_spmm
+    (n_live then comes from the bitmap; same stream_bytes rule).
+    Returns (x' @ w, bitmap, fetched bytes)."""
+    if _producer_fits_vmem(x2, cfg):
+        from ..kernels.spmm_cs import zebra_spmm_cs
+        payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
+        out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc,
+                            interpret=cfg.interpret)
+    else:
+        from ..kernels.zebra_spmm import zebra_spmm
+        y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
+        out = zebra_spmm(y2, w, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
+        n_live = jnp.sum(bitmap.astype(jnp.int32))
+    measured = stream_bytes(n_live, bs, bc, x2.dtype, bitmap.size)
     return out.astype(x2.dtype), bitmap, measured
 
 

@@ -48,6 +48,10 @@ class ZebraConfig:
     backend: str = "reference"   # reference | pallas | stream | fused
     site_backends: tuple[tuple[str, str], ...] = ()  # per-site overrides
     interpret: bool = True       # Pallas interpret mode (CPU containers)
+    vmem_budget_bytes: int = 8 * 1024 * 1024
+                                 # per-launch VMEM working-set cap the tile
+                                 # chooser (tiles_for) sizes comparator
+                                 # tiles against (~half a 16 MB core)
 
     def replace(self, **kw) -> "ZebraConfig":
         return dataclasses.replace(self, **kw)
@@ -55,6 +59,24 @@ class ZebraConfig:
     def backend_for(self, site: str = "") -> str:
         """Resolve the execution backend for one named site."""
         return dict(self.site_backends).get(site, self.backend) or "reference"
+
+    def tiles_for(self, M: int, K: int, bs: int, bc: int, dtype) -> tuple[int, int]:
+        """VMEM-budget/dtype-aware comparator tile (tm, tk) for an (M, K)
+        map with (bs, bc) Zebra blocks.
+
+        The comparator holds an input tile and an output tile in VMEM
+        (2 * tm * tk * itemsize bytes; the bitmap tile is negligible), so
+        the chooser takes the widest block-aligned tk that leaves at least
+        one block row within ``vmem_budget_bytes``, then the tallest
+        block-aligned tm that fits — bf16 maps get twice the f32 tile.
+        Never shrinks below one (bs, bc) block; XLA pads sub-tile maps.
+        """
+        item = jnp.dtype(dtype).itemsize
+        budget = max(int(self.vmem_budget_bytes), 2 * bs * bc * item)
+        tk = min(K, (budget // (2 * bs * item) // bc) * bc)
+        tk = max(tk, bc)
+        tm = min(M, (budget // (2 * tk * item) // bs) * bs)
+        return max(tm, bs), tk
 
 
 # ---------------------------------------------------------------------------

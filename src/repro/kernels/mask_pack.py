@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: single-pass Zebra streaming producer.
+
+``zebra_mask_pack`` fuses the comparator (``zebra_mask``) and the payload
+compaction (``zebra_pack``) into ONE grid pass over the activation map:
+each ``(bs, bc)`` block is loaded into VMEM exactly once, its max is
+compared against ``t_obj``, and — if it survives — the block is written
+straight into the next payload slot. The dense masked map is *never
+materialized*: the only things that leave the kernel are the compressed
+``(payload, bitmap, n_live)`` stream, which is exactly what the paper's
+accelerator puts on DRAM (Eq. 2/3).
+
+Compaction uses an *online* exclusive prefix sum: the TPU grid is
+sequential (row-major, last axis fastest — the same row-major block order
+as ``zebra_pack``'s scatter), so a running counter in SMEM scratch is at
+every step equal to the exclusive prefix sum of the keep flags that
+``pack.py`` scalar-prefetches — without needing the bitmap before launch,
+which is what makes the pass single. Dead blocks write nothing; the
+payload tail past ``n_live`` is zeroed up front, so the stream is
+deterministic and bitwise-identical to ``zebra_pack(zebra_mask(x))``
+(live blocks are untouched by masking, so packing *raw* live blocks is
+already packing masked ones).
+
+The payload output block is the whole ``(n_blocks, bs, bc)`` buffer with a
+constant index map — it stays resident for the entire grid (written back
+to HBM once at the end), so the map's worst-case payload must fit in
+VMEM. The engine gates dispatch on ``ZebraConfig.vmem_budget_bytes``
+(``core.engine._producer_fits_vmem``) and degrades over-budget maps to
+the tiled multi-launch pipeline whose comparator tiles come from
+``ZebraConfig.tiles_for``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mask_pack_kernel(x_ref, p_ref, bm_ref, nl_ref, count_ref, *,
+                      t_obj: float):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        count_ref[0] = 0
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    blk = x_ref[...]                                       # (bs, bc)
+    live = jnp.max(jnp.abs(blk)) >= jnp.asarray(t_obj, blk.dtype)
+    bm_ref[0, 0] = live.astype(jnp.int8)
+    slot = count_ref[0]                  # == excl. prefix sum of keep flags
+
+    @pl.when(live)
+    def _write():
+        p_ref[pl.ds(slot, 1)] = blk[None]
+        count_ref[0] = slot + 1
+
+    nl_ref[0] = count_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("t_obj", "bs", "bc", "interpret"))
+def zebra_mask_pack(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
+                    interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-pass comparator + compaction over an (M, K) map.
+
+    Returns ``(payload (n_blocks, bs, bc) — live blocks first in row-major
+    block order, zero tail; bitmap (M//bs, K//bc) int8; n_live () int32)``.
+    Bitwise-identical to ``zebra_pack(*zebra_mask(x))`` in one launch.
+    """
+    M, K = x.shape
+    if M % bs or K % bc:
+        raise ValueError(f"(M={M}, K={K}) must divide by block ({bs},{bc})")
+    nm, nk = M // bs, K // bc
+    nb = nm * nk
+    payload, bitmap, n_live = pl.pallas_call(
+        functools.partial(_mask_pack_kernel, t_obj=t_obj),
+        grid=(nm, nk),
+        in_specs=[pl.BlockSpec((bs, bc), lambda i, j: (i, j))],
+        out_specs=[
+            # whole payload resident across the grid: constant index map,
+            # written back once; enables the in-kernel dynamic-slot store.
+            pl.BlockSpec((nb, bs, bc), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs, bc), x.dtype),
+            jax.ShapeDtypeStruct((nm, nk), jnp.int8),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return payload, bitmap, n_live[0]

@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .mask_pack import zebra_mask_pack
 from .pack import zebra_pack, zebra_unpack
+from .spmm_cs import zebra_spmm_cs
 from .zebra_mask import zebra_mask
 from .zebra_spmm import zebra_spmm
 from . import ref
@@ -41,11 +43,28 @@ def zebra_unpack_op(payload: jax.Array, bitmap: jax.Array, bs: int = 8,
     return zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=interpret)
 
 
+def zebra_mask_pack_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
+                       interpret: bool = True):
+    """Single-pass producer: (M, K) -> (payload, bitmap, n_live)."""
+    return zebra_mask_pack(x, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
+
+
+def zebra_spmm_cs_op(payload: jax.Array, w: jax.Array, bitmap: jax.Array,
+                     bs: int = 8, bc: int = 128, interpret: bool = True):
+    """Compressed-stream consumer: payload x (K, N) -> (M, N) fp32."""
+    return zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, interpret=interpret)
+
+
 def zebra_ffn_hidden(x: jax.Array, w_out: jax.Array, t_obj: float,
                      bs: int = 8, bc: int = 128, interpret: bool = True):
-    """Fused: h' = zebra(h); y = h' @ W_out, skipping dead blocks."""
+    """Fused: h' = zebra(h); y = h' @ W_out, skipping dead blocks.
+
+    Single-pass streaming form: mask_pack produces the compressed stream
+    (one launch, no dense masked intermediate) and the GEMM consumes the
+    payload directly (second launch)."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    h, bm = zebra_mask(x2, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
-    y = zebra_spmm(h, w_out, bm, bs=bs, bc=bc, interpret=interpret)
+    payload, bm, _ = zebra_mask_pack(x2, t_obj=t_obj, bs=bs, bc=bc,
+                                     interpret=interpret)
+    y = zebra_spmm_cs(payload, w_out, bm, bs=bs, bc=bc, interpret=interpret)
     return y.reshape(*shape[:-1], w_out.shape[-1]), bm

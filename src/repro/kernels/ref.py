@@ -75,3 +75,22 @@ def zebra_unpack_ref(payload: jax.Array, bitmap: jax.Array, bs: int, bc: int
     src = jnp.cumsum(keep) - keep                     # exclusive prefix sum
     blocks = payload[src] * keep[:, None, None].astype(payload.dtype)
     return _from_blocks(blocks, nm, nk)
+
+
+def zebra_mask_pack_ref(x: jax.Array, t_obj: float, bs: int, bc: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-pass streaming oracle: comparator + compaction composed.
+
+    Returns (payload, bitmap, n_live) — the contract for zebra_mask_pack.
+    """
+    y, bitmap = zebra_mask_ref(x, t_obj, bs, bc)
+    payload, n_live = zebra_pack_ref(y, bitmap, bs, bc)
+    return payload, bitmap, n_live
+
+
+def zebra_spmm_cs_ref(payload: jax.Array, w: jax.Array, bitmap: jax.Array,
+                      bs: int, bc: int) -> jax.Array:
+    """Compressed-stream GEMM oracle: unpack the payload, then the dense
+    masked matmul — the contract for zebra_spmm_cs."""
+    x = zebra_unpack_ref(payload, bitmap, bs, bc)
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

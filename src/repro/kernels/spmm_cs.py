@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: GEMM over the *compressed* Zebra stream.
+
+``zebra_spmm_cs`` computes ``y = mask(x) @ w`` reading its activations
+straight from the ``(payload, bitmap)`` stream that ``zebra_mask_pack``
+produced — the dense masked map is never reconstructed. The bitmap's
+exclusive prefix sum (scalar-prefetched in SMEM) is the block -> payload
+slot index map, so a live K-block's tile is fetched from its compacted
+payload slot and a dead K-block is never fetched at all: the BlockSpec
+replays the prefix-sum slot (which for a dead block equals the *next*
+live block's slot — an in-bounds revolving-door reuse) and ``pl.when``
+drops its contribution.
+
+Accumulation order and tile shapes are identical to ``zebra_spmm`` (K
+innermost, fp32 VMEM accumulator, one (bs, bc) activation block per K
+step), so the result is bitwise-equal to the dense-input kernel — which
+is itself bitwise-equal to ``reference`` masking + dense matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..utils import cdiv
+
+
+def _spmm_cs_kernel(smap_ref, keep_ref, p_ref, w_ref, y_ref, acc_ref, *,
+                    nk: int):
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = keep_ref[i * nk + k] != 0
+
+    @pl.when(live)
+    def _acc():
+        acc_ref[...] += jnp.dot(p_ref[...][0], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "interpret"))
+def zebra_spmm_cs(payload: jax.Array, w: jax.Array, bitmap: jax.Array, *,
+                  bs: int = 8, bc: int = 128, bn: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """(n_blocks, bs, bc) payload x (K, N) weight -> (M, N) fp32.
+
+    ``bitmap`` is the (M//bs, K//bc) keep map; payload slots follow
+    ``zebra_mask_pack``'s row-major live-first order.
+    """
+    nm, nk = bitmap.shape
+    K, N = w.shape
+    if K != nk * bc:
+        raise ValueError(f"w rows {K} != bitmap cols {nk} * bc {bc}")
+    if payload.shape != (nm * nk, bs, bc):
+        raise ValueError(f"payload {payload.shape} != ({nm * nk}, {bs}, {bc})")
+    bn = min(bn, N)
+    nn = cdiv(N, bn)
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+    smap = (jnp.cumsum(keep) - keep).astype(jnp.int32)   # block -> slot
+
+    out = pl.pallas_call(
+        functools.partial(_spmm_cs_kernel, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nm, nn, nk),
+            in_specs=[
+                pl.BlockSpec((1, bs, bc),
+                             lambda i, j, k, smap, keep: (smap[i * nk + k], 0, 0)),
+                pl.BlockSpec((bc, bn), lambda i, j, k, smap, keep: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bn), lambda i, j, k, smap, keep: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((nm * bs, N), jnp.float32),
+        interpret=interpret,
+    )(smap, keep, payload, w)
+    return out

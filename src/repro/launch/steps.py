@@ -146,10 +146,19 @@ def make_generate(model: LM, mesh, steps: int):
     decode step — a single dispatch for ``steps`` tokens instead of one
     Python-loop dispatch per token.
 
+    ``state`` may arrive with its KV caches in compressed payload form
+    (``CompressedMap`` leaves from serve.py's prefill -> decode handoff):
+    what crosses the jit boundary is the (payload, bitmap) stream, and the
+    caches are unpacked here, inside the dispatch, before the scan.
+
     generate(params, tok0 (B,1), state, pos0) -> (tokens (B, steps), state)
     """
+    from ..compress import decompress_tree
+
     def generate(params, tok0, state, pos0):
         with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
+            state = decompress_tree(state)     # no-op for dense caches
+
             def body(carry, i):
                 tok, st = carry
                 logits, st = model.decode_step(params, tok, st, pos0 + i)

@@ -1,0 +1,251 @@
+"""Single-pass Zebra streaming: zebra_mask_pack / zebra_spmm_cs parity vs
+the composed pipelines, the all-dead (n_live == 0) edge case, the VMEM
+tile chooser, and the structural ≤2-launch / no-dense-intermediate
+contract of the stream and fused engine backends (asserted on the jaxpr).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ZebraConfig, zebra_site
+from repro.kernels import (ref, zebra_mask_op, zebra_mask_pack_op,
+                           zebra_pack_op, zebra_spmm_cs_op, zebra_spmm_op,
+                           zebra_unpack_op)
+
+K = jax.random.PRNGKey(0)
+
+
+def _blocky(key, M, Kd, bs, bc, dtype=jnp.float32):
+    x = jax.random.normal(key, (M, Kd), jnp.float32)
+    scale = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (M // bs, Kd // bc))
+    x = x * jnp.repeat(jnp.repeat(scale, bs, 0), bc, 1)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: fused producer/consumer vs the composed pipelines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,Kd,bs,bc", [
+    (16, 128, 8, 128), (64, 512, 8, 128), (128, 256, 16, 64),
+    (24, 384, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mask_pack_matches_composed(M, Kd, bs, bc, dtype):
+    x = _blocky(K, M, Kd, bs, bc, dtype)
+    p_f, bm_f, nl_f = zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)
+    y_c, bm_c = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    p_c, nl_c = zebra_pack_op(y_c, bm_c, bs=bs, bc=bc)
+    np.testing.assert_array_equal(np.asarray(bm_f), np.asarray(bm_c))
+    np.testing.assert_array_equal(np.asarray(p_f, np.float32),
+                                  np.asarray(p_c, np.float32))
+    assert int(nl_f) == int(nl_c)
+    # and against the pure-jnp oracle
+    p_r, bm_r, nl_r = ref.zebra_mask_pack_ref(x, 0.5, bs, bc)
+    np.testing.assert_array_equal(np.asarray(p_f, np.float32),
+                                  np.asarray(p_r, np.float32))
+    assert int(nl_f) == int(nl_r)
+
+
+@pytest.mark.parametrize("M,Kd,N", [(16, 256, 128), (64, 512, 96),
+                                    (32, 384, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_cs_matches_dense_and_spmm(M, Kd, N, dtype):
+    bs, bc = 8, 128
+    x = _blocky(K, M, Kd, bs, bc, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (Kd, N), jnp.float32).astype(dtype)
+    payload, bm, _ = zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)
+    y_cs = zebra_spmm_cs_op(payload, w, bm, bs=bs, bc=bc)
+    # bitwise vs the dense-input block-skipping GEMM (same accumulation)
+    y_mask, _ = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    np.testing.assert_array_equal(
+        np.asarray(y_cs), np.asarray(zebra_spmm_op(y_mask, w, bm, bs=bs, bc=bc)))
+    # close to the dense masked matmul oracle
+    np.testing.assert_allclose(
+        np.asarray(y_cs), np.asarray(ref.zebra_spmm_cs_ref(payload, w, bm, bs, bc)),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4, atol=1e-2)
+
+
+def test_engine_stream_fused_parity_nchw_shrink_to_2():
+    """Shrunken NCHW blocks (b=2) run the single-pass path bitwise equal
+    to reference on both compressed backends."""
+    B, C, H, W = 2, 3, 2, 2
+    x = jax.nn.relu(jax.random.normal(K, (B, C, H, W)))
+    cfg = ZebraConfig(t_obj=0.6, block_hw=4, mode="infer")   # shrinks to 2
+    yr, ar = zebra_site(x, cfg.replace(backend="reference"), layout="nchw")
+    for backend in ("stream", "fused"):
+        yb, ab = zebra_site(x, cfg.replace(backend=backend), layout="nchw")
+        np.testing.assert_array_equal(np.asarray(yr), np.asarray(yb))
+        assert ab.backend == backend
+        assert np.isclose(float(ar.zero_frac), float(ab.zero_frac))
+
+
+def test_engine_degenerate_decode_bs1_falls_back_to_reference():
+    """S=1 decode-shaped maps must keep falling back to reference (a 1-row
+    block has no skippable HBM tile) on every compressed backend."""
+    x = jax.random.normal(K, (2, 1, 256))
+    cfg = ZebraConfig(t_obj=0.5, mode="infer")
+    yr, _ = zebra_site(x, cfg.replace(backend="reference"))
+    for backend in ("stream", "fused"):
+        yb, ab = zebra_site(x, cfg.replace(backend=backend))
+        np.testing.assert_array_equal(np.asarray(yr), np.asarray(yb))
+        assert ab.backend == "reference"
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: the all-dead map (n_live == 0)
+# ---------------------------------------------------------------------------
+
+def test_all_dead_map_round_trips_to_zeros_with_index_bytes_only():
+    bs, bc = 8, 128
+    x = _blocky(K, 32, 256, bs, bc)
+    t_huge = 1e9
+
+    payload, bm, nl = zebra_mask_pack_op(x, t_huge, bs=bs, bc=bc)
+    assert int(nl) == 0 and not np.any(np.asarray(bm))
+    assert not np.any(np.asarray(payload))                # zero tail only
+
+    # composed pack on an all-dead bitmap agrees
+    y_m, bm_m = zebra_mask_op(x, t_huge, bs=bs, bc=bc)
+    p_c, nl_c = zebra_pack_op(y_m, bm_m, bs=bs, bc=bc)
+    assert int(nl_c) == 0 and not np.any(np.asarray(p_c))
+
+    # unpack and both GEMMs reconstruct exact zeros
+    assert not np.any(np.asarray(zebra_unpack_op(payload, bm, bs=bs, bc=bc)))
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 64), jnp.float32)
+    assert not np.any(np.asarray(zebra_spmm_op(x, w, bm, bs=bs, bc=bc)))
+    assert not np.any(np.asarray(zebra_spmm_cs_op(payload, w, bm, bs=bs, bc=bc)))
+
+    # engine: measured stream length is the packed index alone
+    for backend, kw in (("stream", {}), ("fused", {"w": w})):
+        y, aux = zebra_site(x, ZebraConfig(t_obj=t_huge, mode="infer",
+                                           backend=backend), **kw)
+        assert not np.any(np.asarray(y))
+        assert float(aux.measured_bytes) == (bm.size + 7) // 8
+        assert float(aux.zero_frac) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget/dtype-aware tile chooser
+# ---------------------------------------------------------------------------
+
+def test_tiles_for_respects_budget_blocks_and_dtype():
+    cfg = ZebraConfig(vmem_budget_bytes=256 * 1024)
+    M, Kd, bs, bc = 4096, 8192, 8, 128
+    tm, tk = cfg.tiles_for(M, Kd, bs, bc, jnp.float32)
+    assert tm % bs == 0 and tk % bc == 0
+    assert 2 * tm * tk * 4 <= cfg.vmem_budget_bytes
+    # bf16 halves the element size -> at least as large a tile area
+    tm2, tk2 = cfg.tiles_for(M, Kd, bs, bc, jnp.bfloat16)
+    assert tm2 * tk2 >= tm * tk and 2 * tm2 * tk2 * 2 <= cfg.vmem_budget_bytes
+    # never below one block, even under an absurdly small budget
+    tiny = ZebraConfig(vmem_budget_bytes=1)
+    assert tiny.tiles_for(M, Kd, bs, bc, jnp.float32) == (bs, bc)
+    # small maps are clamped to the map, block-aligned
+    tm3, tk3 = cfg.tiles_for(16, 256, bs, bc, jnp.float32)
+    assert tm3 <= 16 and tk3 <= 256 and tm3 % bs == 0 and tk3 % bc == 0
+    # the chooser drives the pallas comparator backend (smoke)
+    x = _blocky(K, 32, 256, bs, bc)
+    zcfg = ZebraConfig(t_obj=0.5, mode="infer", backend="pallas",
+                       vmem_budget_bytes=64 * 1024)
+    yr, _ = zebra_site(x, zcfg.replace(backend="reference"))
+    yp, _ = zebra_site(x, zcfg)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(yp))
+
+
+def test_over_budget_maps_degrade_to_tiled_pipeline_same_stream():
+    """A map whose worst-case payload exceeds vmem_budget_bytes can't keep
+    it VMEM-resident: stream/fused degrade to the tiled multi-launch
+    pipeline — bitwise-identical output, identical measured bytes."""
+    bs, bc = 8, 128
+    x = _blocky(K, 32, 256, bs, bc)                # 32 KiB map
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 64), jnp.float32)
+    big = ZebraConfig(t_obj=0.5, mode="infer")     # default budget: fits
+    small = big.replace(vmem_budget_bytes=16 * 1024)   # payload won't fit
+    for backend, kw in (("stream", {}), ("fused", {"w": w})):
+        y1, a1 = zebra_site(x, big.replace(backend=backend), **kw)
+        y2, a2 = zebra_site(x, small.replace(backend=backend), **kw)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+        assert float(a1.measured_bytes) == float(a2.measured_bytes)
+        assert a2.backend == backend
+    # and the fallback really is the 3-launch pipeline for stream
+    fn = lambda xx: zebra_site(xx, small.replace(backend="stream"))[0]
+    assert len(_pallas_eqns(jax.make_jaxpr(fn)(x).jaxpr)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Structural contract: ≤ 2 launches, no dense (M, K) intermediate
+# ---------------------------------------------------------------------------
+
+def _subjaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _pallas_eqns(jaxpr):
+    """Every pallas_call equation in the jaxpr, in trace order."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+            continue                     # kernel bodies never nest launches
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                out.extend(_pallas_eqns(sub))
+    return out
+
+
+def _shapes(eqn):
+    return [tuple(v.aval.shape) for v in eqn.outvars]
+
+
+@pytest.mark.parametrize("backend", ["stream", "fused"])
+def test_engine_backends_two_launches_no_dense_intermediate(backend):
+    """Acceptance: stream and fused each execute in ≤ 2 Pallas launches,
+    and no launch before the last one emits the dense (M, K) map — the
+    only thing between producer and consumer is the compressed stream."""
+    B, S, D = 2, 32, 256
+    M = B * S
+    x = _blocky(K, M, D, 8, 128).reshape(B, S, D)
+    w = jax.random.normal(jax.random.PRNGKey(3), (D, 64), jnp.float32)
+    cfg = ZebraConfig(t_obj=0.5, mode="infer", backend=backend)
+
+    if backend == "fused":
+        fn = lambda xx: zebra_site(xx, cfg, w=w)[0]
+    else:
+        fn = lambda xx: zebra_site(xx, cfg)[0]
+    eqns = _pallas_eqns(jax.make_jaxpr(fn)(x).jaxpr)
+    assert len(eqns) == 2, f"{backend}: {len(eqns)} launches"
+    for eqn in eqns[:-1]:
+        assert (M, D) not in _shapes(eqn), (
+            f"{backend}: producer launch materializes the dense map "
+            f"{_shapes(eqn)}")
+    if backend == "fused":               # consumer emits (M, N), never (M, K)
+        assert (M, D) not in _shapes(eqns[-1])
+
+
+def test_composed_kernels_would_use_three_launches():
+    """The structural count is meaningful: the legacy composed stream
+    pipeline really traces 3 launches where the engine path traces 2."""
+    from repro.compress import transport_tokens
+    from repro.kernels.pack import zebra_pack, zebra_unpack
+    from repro.kernels.zebra_mask import zebra_mask
+
+    x = _blocky(K, 32, 256, 8, 128)
+
+    def composed(xx):
+        y, bm = zebra_mask(xx, t_obj=0.5, bs=8, bc=128)
+        p, _ = zebra_pack(y, bm, bs=8, bc=128)
+        return zebra_unpack(p, bm, bs=8, bc=128)
+
+    assert len(_pallas_eqns(jax.make_jaxpr(composed)(x).jaxpr)) == 3
+    # transport_tokens is now the 2-launch single-pass form
+    fn = lambda xx: transport_tokens(xx, 0.5, bs=8, bc=128)[0]
+    assert len(_pallas_eqns(jax.make_jaxpr(fn)(x).jaxpr)) == 2
