@@ -22,7 +22,7 @@ import os
 import sys
 import time
 
-SMOKE_BENCHES = ("table5", "kernels", "roofline", "bandwidth")
+SMOKE_BENCHES = ("table5", "kernels", "roofline", "bandwidth", "train")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -38,13 +38,13 @@ def main() -> None:
                          "root (perf-trajectory artifacts)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "kernels,roofline,bandwidth")
+                         "kernels,roofline,bandwidth,train")
     args = ap.parse_args()
 
     # importing every bench module IS the smoke import-check
     from . import (bandwidth_bench, kernel_bench, roofline, table1_zero_blocks,
                    table2_cifar, table3_tinyimagenet, table4_ablation,
-                   table5_overhead)
+                   table5_overhead, train_bench)
     from .common import FULL, QUICK, set_json_dir
 
     if args.json:
@@ -61,6 +61,7 @@ def main() -> None:
         "table3": lambda: table3_tinyimagenet.run(budget, quick),
         "table4": lambda: table4_ablation.run(budget, quick),
         "bandwidth": lambda: bandwidth_bench.run(smoke=quick or args.smoke),
+        "train": lambda: train_bench.run(budget, quick),
     }
     if args.only:
         only = args.only.split(",")

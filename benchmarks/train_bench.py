@@ -1,0 +1,138 @@
+"""Train-step latency + smoke: reference vs pallas kernel backends.
+
+This is the CI witness that training *through the kernels* works: for
+each backend it runs a real 2-step train loop (CNN via ``CNNTrainer``,
+LM via ``launch.steps.make_train_step``) in constant-threshold
+(deployment-matched) mode — ``use_tnet=False`` so the sites resolve to
+the requested kernel backend instead of degrading to reference — and
+asserts the loss is finite, the gradients are nonzero, and the
+reference/pallas losses agree (the custom_vjp forward is the bitwise
+comparator, and its backward is numerically equal to reference).
+
+Rows ride the ``BENCH_train.json`` perf-trajectory artifact
+(``benchmarks/common.emit`` schema v1); ``scripts/ci.sh`` validates that
+both backends are present with the smoke flags set.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ZebraConfig
+from repro.data import ImageDatasetConfig, LMDatasetConfig, image_batch, lm_batch
+from repro.optim import sgd, step_decay
+from repro.train import CNNTrainer, CNNTrainConfig
+
+from .common import emit, timeit
+
+BACKENDS = ("reference", "pallas")
+
+
+def _row(name, us, backend, resolved, loss, grad_norm, extra=None):
+    """``resolved`` must come from the REAL run's SiteAux.backend values —
+    a synthetic probe could stay on the kernel while the model's own
+    sites silently degraded (degrade is numerically invisible by
+    design, so only the real sites prove the kernels trained)."""
+    loss, grad_norm = float(loss), float(grad_norm)
+    assert math.isfinite(loss), f"{name}: non-finite loss {loss}"
+    assert grad_norm > 0.0, f"{name}: zero gradients"
+    r = {"name": name, "us_per_call": us, "backend": backend,
+         "resolved_backend": resolved,
+         "loss": round(loss, 6), "grad_norm": round(grad_norm, 6),
+         "loss_finite": True, "grads_nonzero": True}
+    r.update(extra or {})
+    return r
+
+
+# ---------------------------------------------------------------------------
+# CNN train step (paper pipeline, constant-threshold mode)
+# ---------------------------------------------------------------------------
+
+def _cnn_rows(steps: int = 2) -> list[dict]:
+    ds = ImageDatasetConfig("syn-cifar10", 10, 8, seed=3)
+    rows, losses = [], {}
+    for backend in BACKENDS:
+        zcfg = ZebraConfig(t_obj=0.25, block_hw=4, backend=backend,
+                           use_tnet=False)
+        cfg = CNNTrainConfig(model="resnet18", width_mult=0.125, dataset=ds,
+                             batch=8, steps=steps, zebra=zcfg, seed=0)
+        tr = CNNTrainer(cfg, sgd(step_decay(0.05, total_steps=steps)))
+        state = tr.init_state()
+        images, labels = image_batch(ds, cfg.batch, 0)
+        metrics = None
+        for _ in range(steps):
+            state, metrics = tr._train_step(state, images, labels)
+        jax.block_until_ready(metrics["loss"])
+        us = timeit(lambda: tr._train_step(state, images, labels)[1]["loss"],
+                    iters=2, warmup=0)
+        losses[backend] = float(metrics["loss"])
+        # what the trained model's OWN sites resolved to, from a real
+        # train-mode forward (every resnet18 site must agree)
+        zc = zcfg.replace(mode="train")
+        _, _, auxes = tr.model.apply(state["variables"], images, True, zc)
+        resolved = sorted({a.backend for a in auxes})
+        assert resolved == [backend], resolved
+        rows.append(_row(f"train/cnn.{backend}", us, backend, resolved[0],
+                         metrics["loss"], metrics["grad_norm"],
+                         {"model": "resnet18", "steps": steps,
+                          "zero_frac": round(float(metrics["zero_frac"]), 4)}))
+    # the kernel path must train the SAME function as reference
+    assert abs(losses["reference"] - losses["pallas"]) < 1e-4, losses
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# LM train step (launch.steps cell, constant-threshold mode)
+# ---------------------------------------------------------------------------
+
+def _lm_rows(steps: int = 2) -> list[dict]:
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_train_state_shape, make_train_step
+    from repro.models.lm import LM, LMConfig
+    from repro.optim import adamw, warmup_cosine
+
+    mesh = make_host_mesh(model=1)
+    rows, losses = [], {}
+    for backend in BACKENDS:
+        cfg = LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=4, d_ff=256, vocab=256, zebra_t_obj=0.5,
+                       zebra_backend=backend, zebra_tnet=False)
+        model = LM(cfg)
+        opt = adamw(warmup_cosine(1e-3, 2, 20))
+        _, init_fn = make_train_state_shape(model, opt)
+        state = jax.jit(init_fn)(jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, opt, mesh))
+        batch = {"tokens": jnp.asarray(
+            lm_batch(LMDatasetConfig(vocab=cfg.vocab), 2, 32, 0))}
+        metrics = None
+        for _ in range(steps):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        us = timeit(lambda: step(state, batch)[1]["loss"], iters=2, warmup=0)
+        losses[backend] = float(metrics["loss"])
+        # what the trained model's OWN ffn site resolves to: run the real
+        # layer-0 params (any zebra_tnet leaf would surface as a degrade)
+        from repro.models.lm.ffn import ffn_apply
+        lp = jax.tree_util.tree_map(lambda a: a[0], state["params"]["run0"])
+        _, zaux = ffn_apply(lp["sub0"]["ffn"],
+                            jnp.ones((2, 32, cfg.d_model), jnp.bfloat16) / 7,
+                            cfg, "train")
+        assert zaux.backend == backend, zaux.backend
+        rows.append(_row(f"train/lm.{backend}", us, backend, zaux.backend,
+                         metrics["loss"], metrics["grad_norm"],
+                         {"model": "lm-2l-64d", "steps": steps,
+                          "zero_frac": round(float(metrics["zero_frac"]), 4)}))
+    assert abs(losses["reference"] - losses["pallas"]) < 1e-4, losses
+    return rows
+
+
+def run(budget=None, quick: bool = True) -> list[dict]:
+    rows = _cnn_rows() + _lm_rows()
+    emit(rows, "train")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -18,7 +18,7 @@ else
     echo "== pip install hypothesis unavailable (offline) — shim run only =="
 fi
 
-echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes; emit BENCH_*.json) =="
+echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes + the 2-step train smoke on the pallas backend; emit BENCH_*.json) =="
 python -m benchmarks.run --smoke --json
 
 echo "== BENCH_*.json perf-trajectory artifacts =="
@@ -26,7 +26,7 @@ python - <<'EOF'
 import json, sys
 
 docs = {}
-for name in ("BENCH_kernels.json", "BENCH_bandwidth.json"):
+for name in ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json"):
     try:
         with open(name) as f:
             docs[name] = doc = json.load(f)
@@ -46,5 +46,23 @@ fused = [r for r in docs["BENCH_kernels.json"]["rows"]
 if not fused:
     sys.exit("FAIL: BENCH_kernels.json has no fused-vs-composed rows")
 print(f"  BENCH_kernels.json: {len(fused)} fused-variant rows OK")
+
+# train-step smoke rows: reference AND pallas backends, CNN and LM, loss
+# finite + grads nonzero, and the pallas rows really resolved to the
+# kernel backend (no silent degrade to reference)
+trows = docs["BENCH_train.json"]["rows"]
+for model in ("cnn", "lm"):
+    for backend in ("reference", "pallas"):
+        match = [r for r in trows if r["name"] == f"train/{model}.{backend}"]
+        if not match:
+            sys.exit(f"FAIL: BENCH_train.json missing train/{model}.{backend}")
+        r = match[0]
+        if not (r.get("loss_finite") and r.get("grads_nonzero")):
+            sys.exit(f"FAIL: {r['name']} train smoke flags not set: {r}")
+        if r.get("resolved_backend") != backend:
+            sys.exit(f"FAIL: {r['name']} resolved to "
+                     f"{r.get('resolved_backend')!r}, expected {backend!r}")
+print(f"  BENCH_train.json: {len(trows)} train-smoke rows OK "
+      f"(reference+pallas, CNN+LM)")
 EOF
 echo "CI OK"

@@ -10,11 +10,16 @@ from .zebra import (  # noqa: F401
     collect_zebra_loss,
     mean_zero_frac,
 )
+from .backends import (  # noqa: F401
+    BackendSpec,
+    backend_names,
+    backend_spec,
+)
 from .engine import (  # noqa: F401
-    BACKENDS,
     LayerAux,
     SiteAux,
     nchw_stream_dims,
+    register_engine_backend,
     site_block,
     wants_fused,
     zebra_site,

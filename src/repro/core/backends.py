@@ -1,0 +1,98 @@
+"""BackendSpec registry — the capability contract of the Zebra site engine.
+
+Every execution backend the engine can dispatch to declares what it is
+*able* to do, and ``core.engine.zebra_site`` resolves each site's
+(mode, layout, shape, threshold-net) situation against those declared
+capabilities instead of a scattered chain of implicit rules. A request
+the backend cannot serve degrades to ``reference`` with an explicit
+reason that is logged once and surfaced in ``SiteAux.backend`` as
+``"reference(<reason>)"`` — never a silent rewrite.
+
+Capabilities:
+
+``trainable``
+    The backend has training semantics: its kernel launches are wrapped
+    in ``jax.custom_vjp`` (``kernels.grad``) whose backward implements
+    the hard/STE/soft gradient modes, numerically equal to the reference
+    path. Only constant-``T_obj`` thresholds are kernel-trainable —
+    sites with a threshold net (per-sample learned thresholds) always
+    resolve to reference via the capability check.
+``emits_stream``
+    The backend moves the compressed ``(payload, 1-bit index)`` stream,
+    so ``SiteAux.measured_bytes`` is a live observable.
+``consumes_w``
+    The backend may take the downstream weight ``w`` and return the
+    product instead of the masked map.
+``vmem_bounded``
+    The single-pass producer must hold the worst-case payload
+    VMEM-resident; the engine gates it on ``ZebraConfig.
+    vmem_budget_bytes`` and falls back to the tiled pipeline beyond it.
+``grad_variant``
+    Which ``kernels.grad`` forward variant implements this backend's
+    trainable path (``"mask"`` | ``"stream"``; None = jnp autodiff).
+
+Registering a new backend (say, a sharded one) is
+``core.engine.register_engine_backend(spec, infer_impl)`` — no model
+code changes: model layers only ever call ``zebra_site``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    trainable: bool
+    emits_stream: bool
+    consumes_w: bool
+    vmem_bounded: bool
+    grad_variant: str | None = None
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    if spec.trainable and spec.name != "reference" and spec.grad_variant is None:
+        raise ValueError(
+            f"backend {spec.name!r}: trainable kernel backends must declare "
+            f"a kernels.grad variant (grad_variant)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def backend_spec(name: str) -> BackendSpec:
+    """Resolve a backend name; raises with the known set on a bad name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown zebra backend {name!r}; expected one of "
+                         f"{backend_names()}") from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def validate_backend(name: str) -> str:
+    backend_spec(name)
+    return name
+
+
+# ---------------------------------------------------------------------------
+# The built-in backends (impls live in core.engine / kernels.grad)
+# ---------------------------------------------------------------------------
+
+register_backend(BackendSpec(
+    "reference", trainable=True, emits_stream=False, consumes_w=True,
+    vmem_bounded=False))
+register_backend(BackendSpec(
+    "pallas", trainable=True, emits_stream=False, consumes_w=False,
+    vmem_bounded=False, grad_variant="mask"))
+register_backend(BackendSpec(
+    "stream", trainable=True, emits_stream=True, consumes_w=False,
+    vmem_bounded=True, grad_variant="stream"))
+register_backend(BackendSpec(
+    "fused", trainable=False, emits_stream=True, consumes_w=True,
+    vmem_bounded=True))

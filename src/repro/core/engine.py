@@ -1,6 +1,6 @@
 """Unified Zebra site engine — ONE backend-dispatched execution path for
 every activation site in the repo (CNN maps, LM FFN hidden maps, layer
-outputs, KV caches).
+outputs, KV caches), in BOTH training and inference.
 
 The paper's pipeline is ``comparator -> block mask -> compressed DRAM
 stream``; this module is the single code path that realizes it. Model code
@@ -10,21 +10,23 @@ the execution backend from ``ZebraConfig.backend`` (with per-site
 overrides via ``ZebraConfig.site_backends``):
 
 ``reference``
-    Pure-jnp masking (``core.zebra``). The only backend with training
-    semantics: threshold nets, the Eq. 1 regularizer and the hard/ste/soft
-    gradient modes live here, so ``mode="train"`` always runs reference
-    regardless of the configured backend.
+    Pure-jnp masking (``core.zebra``). The only backend that can serve
+    threshold *nets* (per-sample learned thresholds + the Eq. 1
+    regularizer); also the degrade target for every capability miss.
 ``pallas``
     The fused comparator kernel (``kernels.zebra_mask``): one VMEM pass
     computes block maxima, compares against T_obj and zeroes dead blocks.
-    Infer only; bitwise-identical to reference.
+    Bitwise-identical to reference — and *trainable*: in train mode the
+    launch is wrapped in ``jax.custom_vjp`` (``kernels.grad``) whose
+    backward implements the hard/STE/soft gradient modes.
 ``stream``
     ``zebra_mask_pack`` -> ``zebra_unpack``: TWO launches, with only the
     compressed ``(payload, bitmap)`` stream between them — the dense
     masked map is never materialized by the producer.
     ``SiteAux.measured_bytes`` reports the observed stream length
     (payload + packed index, the Eq. 2/3 observable). Numerically
-    identical to reference — but the bytes are real.
+    identical to reference — and trainable through the same custom_vjp,
+    so the bytes observable stays live during training.
 ``fused``
     ``zebra_mask_pack`` -> ``zebra_spmm_cs``: TWO launches; the
     downstream matmul reads live blocks straight from the compressed
@@ -32,35 +34,56 @@ overrides via ``ZebraConfig.site_backends``):
     K-blocks without ever unpacking (dynamic feature-map pruning, Liang
     et al. 2018 style). Needs the downstream weight ``w``; used by the
     dense FFN ``w_down``. Byte accounting is the same ``stream_bytes``
-    helper as stream (live payload + index is exactly what the GEMM
-    fetches from HBM), fed by the producer's ``n_live`` counter.
+    helper as stream. Infer-only (the payload-consuming GEMM has no
+    backward rule) — train-mode requests degrade to reference.
+
+Capability resolution. Which backend actually executes is decided by the
+:mod:`core.backends` registry: each :class:`~repro.core.backends.
+BackendSpec` declares ``trainable`` / ``emits_stream`` / ``consumes_w``
+/ ``vmem_bounded``, and :func:`zebra_site` resolves the site's
+(mode, threshold-net, shape) situation against those capabilities. A
+request the backend cannot serve degrades to ``reference`` with an
+explicit reason — logged once per (site, backend, reason) and surfaced
+in ``SiteAux.backend`` as ``"reference(<reason>)"``; there are no
+implicit rewrites. The current reasons:
+
+``tnet``             train mode with a threshold net: per-sample learned
+                     thresholds (and their Eq. 1 gradient) are jnp-only.
+``not-trainable``    train mode on a backend without a custom_vjp
+                     backward (``fused``).
+``degenerate-rows``  token maps whose S doesn't divide ``block_seq``
+                     (e.g. single-token decode) degrade to ``bs=1`` — a
+                     one-row "block" has no skippable HBM tile, so
+                     kernel dispatch would be pure overhead.
 
 Layouts. ``tokens`` maps ``(..., S, D)`` tile into ``(block_seq,
 block_ch)`` VMEM blocks. ``nchw`` maps ``(B, C, H, W)`` use the paper's
 spatial ``b x b`` blocks per channel; the engine flattens them onto the
 kernels' 2-D ``(M, K)`` tile grid as ``(B*C*H, W)`` with ``bs = bc = b``
 — every ``(b, b)`` tile of that matrix is exactly one spatial block of
-one channel (H, W divide by b, so tiles never straddle planes). That one
-reshape is what gives CNN maps real compressed transport.
+one channel (H, W divide by b, so tiles never straddle planes). NCHW
+blocks shrink to the largest divisor of (H, W) (paper: "block size 2
+when the map goes to 2x2") and stay on the selected backend.
 
-Block adaptation mirrors the historical per-site behavior: NCHW blocks
-shrink to the largest divisor of (H, W) (paper: "block size 2 when the
-map goes to 2x2") and stay on the selected backend; token maps whose S
-doesn't divide by ``block_seq`` (e.g. single-token decode) degrade to
-``bs=1`` and fall back to ``reference`` — a one-row "block" has no
-skippable HBM tile, so kernel dispatch would be pure overhead.
+New backends register through :func:`register_engine_backend` — model
+code needs no changes, which is the structural point of the registry.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from .zebra import ZebraConfig, zebra_cnn, zebra_tokens
+from . import backends
+from .backends import BackendSpec, backend_names, backend_spec
+from .zebra import (ZebraConfig, effective_tnet, require_tnet, zebra_cnn,
+                    zebra_tokens)
 
-BACKENDS = ("reference", "pallas", "stream", "fused")
+_log = logging.getLogger("repro.engine")
+_DEGRADE_LOGGED: set[tuple[str, str, str]] = set()
 
 
 # ---------------------------------------------------------------------------
@@ -72,15 +95,21 @@ BACKENDS = ("reference", "pallas", "stream", "fused")
 class SiteAux:
     """What one Zebra site reports, uniformly across backends.
 
-    ``reg``             Eq. 1 regularizer term (0 outside train/reference).
+    ``reg``             Eq. 1 regularizer term: threshold-net L2 pull in
+                        tnet-train mode; the realized zero-block count
+                        (zero_frac · n_blocks, stop-gradiented) in
+                        constant-threshold train mode; 0 in infer mode.
     ``zero_frac``       fraction of blocks masked to zero at this site.
     ``measured_bytes``  observed transport bytes (payload + packed index)
-                        for the whole input; 0 for backends that move the
-                        map dense (reference/pallas) or do not run.
+                        for the whole input, exact int32; 0 for backends
+                        that move the map dense (reference/pallas) or do
+                        not run.
     ``n_blocks``        static per-sample block count (0 when disabled),
                         the weight used by ``mean_zero_frac``.
-    ``thresholds``      train-mode thresholds (None in infer mode).
-    ``backend``         which backend actually executed (static).
+    ``thresholds``      train-mode threshold-net outputs (None otherwise).
+    ``backend``         which backend actually executed (static). A
+                        capability degrade is surfaced here as
+                        ``"reference(<reason>)"``.
 
     Supports dict-style access (``aux["zero_frac"]``, ``aux.get(...)``)
     so it is a drop-in for the legacy per-site aux dicts.
@@ -112,8 +141,25 @@ class SiteAux:
     @classmethod
     def empty(cls, backend: str = "disabled") -> "SiteAux":
         return cls(reg=jnp.float32(0.0), zero_frac=jnp.float32(0.0),
-                   measured_bytes=jnp.float32(0.0), n_blocks=0,
+                   measured_bytes=jnp.int32(0), n_blocks=0,
                    thresholds=None, backend=backend)
+
+
+MB_BASE = 16777216             # 2**24 — f32 integers are exact below this
+_MB_BASE = float(MB_BASE)
+
+
+def add_byte_pair(hi_a, lo_a, hi_b, lo_b):
+    """Add two (hi, lo) base-2**24 byte pairs exactly.
+
+    The lo legs are added in int32: each is an exact integer < 2**24, but
+    their f32 SUM can land between representable values above 2**24 (odd
+    sums round) — the carry must be extracted from an exact sum. The ONE
+    carry rule; LayerAux.__add__ and the train-step microbatch
+    accumulator both use it."""
+    lo = lo_a.astype(jnp.int32) + lo_b.astype(jnp.int32)
+    hi = hi_a + hi_b + (lo // jnp.int32(MB_BASE)).astype(jnp.float32)
+    return hi, (lo % jnp.int32(MB_BASE)).astype(jnp.float32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -121,20 +167,29 @@ class SiteAux:
 class LayerAux:
     """Site aux accumulated across layers/sites — the scan-carry form.
 
-    Five f32 scalars so it rides ``jax.lax.scan`` carries and jit
-    boundaries. ``zf_blocks`` is Σ zero_frac·n_blocks, so ``zero_frac``
-    (the property) is the block-count-weighted mean with a guard for the
-    no-divisible-leaf / no-site case (n_blocks == 0 -> 0, no div-by-zero).
+    f32 scalars so it rides ``jax.lax.scan`` carries and jit boundaries.
+    ``zf_blocks`` is Σ zero_frac·n_blocks, so ``zero_frac`` (the
+    property) is the block-count-weighted mean with a guard for the
+    no-divisible-leaf / no-site case (n_blocks == 0 -> 0, no div/0).
+
+    Measured bytes ride the carry as the exact f32 pair ``(mb_hi,
+    mb_lo)`` with base 2**24: per-site counts are int32-exact, but a
+    single f32 accumulator would start rounding as soon as the running
+    total crossed 16 MiB. The pair keeps accumulation exact to 2**48
+    bytes; read it back with :meth:`measured_bytes_exact` (host) — the
+    in-graph ``measured_bytes`` property is a display convenience that
+    rounds above 16 MiB.
     """
     reg: jax.Array
     zf_blocks: jax.Array
     n_blocks: jax.Array
-    measured_bytes: jax.Array
+    mb_hi: jax.Array
+    mb_lo: jax.Array
     router_aux: jax.Array
 
     def tree_flatten(self):
         return ((self.reg, self.zf_blocks, self.n_blocks,
-                 self.measured_bytes, self.router_aux), None)
+                 self.mb_hi, self.mb_lo, self.router_aux), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -143,28 +198,42 @@ class LayerAux:
     @classmethod
     def zero(cls) -> "LayerAux":
         z = jnp.float32(0.0)
-        return cls(z, z, z, z, z)
+        return cls(z, z, z, z, z, z)
 
     @classmethod
     def of_site(cls, site: SiteAux, router_aux=0.0) -> "LayerAux":
         nb = jnp.float32(site.n_blocks)
+        mb = jnp.asarray(site.measured_bytes).astype(jnp.int32)
+        base = jnp.int32(_MB_BASE)
         return cls(reg=jnp.float32(site.reg),
                    zf_blocks=jnp.float32(site.zero_frac) * nb,
                    n_blocks=nb,
-                   measured_bytes=jnp.float32(site.measured_bytes),
+                   mb_hi=(mb // base).astype(jnp.float32),
+                   mb_lo=(mb % base).astype(jnp.float32),
                    router_aux=jnp.float32(router_aux))
 
     def __add__(self, other: "LayerAux") -> "LayerAux":
+        hi, lo = add_byte_pair(self.mb_hi, self.mb_lo,
+                               other.mb_hi, other.mb_lo)
         return LayerAux(self.reg + other.reg,
                         self.zf_blocks + other.zf_blocks,
                         self.n_blocks + other.n_blocks,
-                        self.measured_bytes + other.measured_bytes,
+                        hi, lo,
                         self.router_aux + other.router_aux)
 
     @property
     def zero_frac(self) -> jax.Array:
         return jnp.clip(self.zf_blocks / jnp.maximum(self.n_blocks, 1.0),
                         0.0, 1.0)
+
+    @property
+    def measured_bytes(self) -> jax.Array:
+        """In-graph f32 readout (rounds above 16 MiB — display only)."""
+        return self.mb_hi * jnp.float32(_MB_BASE) + self.mb_lo
+
+    def measured_bytes_exact(self) -> int:
+        """Exact host-side readout of the accumulated byte pair."""
+        return int(float(self.mb_hi)) * int(_MB_BASE) + int(float(self.mb_lo))
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +281,8 @@ def stream_bytes(n_live: jax.Array, bs: int, bc: int, dtype,
     fused cannot drift apart in how they reconcile against Eq. 2/3.
     Integer arithmetic: exact (the sub-1-byte reconciliation bound must
     hold per site) for payloads up to 2 GiB; float32 would already round
-    above 16 MiB.
+    above 16 MiB. Cross-site accumulation stays exact via the
+    ``LayerAux`` (mb_hi, mb_lo) pair.
     """
     item = jnp.dtype(dtype).itemsize
     return (n_live.astype(jnp.int32) * (bs * bc * item)
@@ -223,20 +293,31 @@ def stream_bytes(n_live: jax.Array, bs: int, bc: int, dtype,
 # Backend implementations — each maps (x2 (M, K), bs, bc, cfg) -> (y2, aux)
 # ---------------------------------------------------------------------------
 
-def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
-    from ..kernels.zebra_mask import zebra_mask
-    M, K = x2.shape
-    tm, tk = cfg.tiles_for(M, K, bs, bc, x2.dtype)
-    y2, bitmap = zebra_mask(x2, t_obj=cfg.t_obj, bs=bs, bc=bc, tm=tm, tk=tk,
-                            interpret=cfg.interpret)
-    return y2, bitmap, jnp.float32(0.0)
-
-
 def _producer_fits_vmem(x2: jax.Array, cfg: ZebraConfig) -> bool:
     """zebra_mask_pack keeps the whole worst-case payload (== the map
     size) VMEM-resident across its grid; maps beyond the budget take the
     tiled multi-launch pipeline instead."""
     return x2.size * jnp.dtype(x2.dtype).itemsize <= cfg.vmem_budget_bytes
+
+
+def _kernel_statics(variant: str, x2: jax.Array, bs: int, bc: int,
+                    cfg: ZebraConfig):
+    """Static launch config for ``kernels.grad.launch_forward`` — the ONE
+    forward pipeline shared by infer dispatch and the custom_vjp train
+    path, so the two cannot drift apart."""
+    from ..kernels.grad import KernelStatics
+    M, K = x2.shape
+    tm, tk = cfg.tiles_for(M, K, bs, bc, x2.dtype)
+    return KernelStatics(variant=variant, t_obj=cfg.t_obj, bs=bs, bc=bc,
+                         tm=tm, tk=tk, grad_mode=cfg.grad_mode,
+                         soft_temp=cfg.soft_temp, interpret=cfg.interpret,
+                         fits_vmem=_producer_fits_vmem(x2, cfg))
+
+
+def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
+    from ..kernels.grad import launch_forward
+    y2, bitmap, _ = launch_forward(x2, _kernel_statics("mask", x2, bs, bc, cfg))
+    return y2, bitmap, jnp.int32(0)
 
 
 def _mask_pack(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
@@ -252,14 +333,9 @@ def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
     Over-budget maps degrade to the tiled mask -> pack -> unpack pipeline
     (3 launches, comparator tiles from cfg.tiles_for) — same stream, same
     byte accounting, the producer just can't hold the payload in VMEM."""
-    from ..kernels.pack import zebra_pack, zebra_unpack
-    if _producer_fits_vmem(x2, cfg):
-        payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
-    else:
-        y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
-        payload, n_live = zebra_pack(y2, bitmap, bs=bs, bc=bc,
-                                     interpret=cfg.interpret)
-    y2 = zebra_unpack(payload, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
+    from ..kernels.grad import launch_forward
+    y2, bitmap, n_live = launch_forward(
+        x2, _kernel_statics("stream", x2, bs, bc, cfg))
     return y2, bitmap, stream_bytes(n_live, bs, bc, x2.dtype, bitmap.size)
 
 
@@ -285,16 +361,110 @@ def _run_fused(x2: jax.Array, w: jax.Array, bs: int, bc: int,
 
 
 # ---------------------------------------------------------------------------
-# The engine entry point
+# Infer-path dispatch table — (x2, bs, bc, cfg, w) -> (y2, bitmap,
+# measured_bytes, n_cols|None). n_cols None = map-shaped output.
 # ---------------------------------------------------------------------------
 
-def wants_fused(cfg: ZebraConfig, site: str = "") -> bool:
-    """True when this site should hand its downstream weight to the engine
-    (infer-mode fused dispatch). Train mode always materializes the masked
-    map (reference), so callers keep their dense matmul there."""
-    return (cfg.enabled and cfg.mode != "train"
-            and cfg.backend_for(site) == "fused")
+def _impl_pallas(x2, bs, bc, cfg, w=None):
+    y2, bitmap, measured = _run_pallas(x2, bs, bc, cfg)
+    return y2, bitmap, measured, None
 
+
+def _impl_stream(x2, bs, bc, cfg, w=None):
+    y2, bitmap, measured = _run_stream(x2, bs, bc, cfg)
+    return y2, bitmap, measured, None
+
+
+def _impl_fused(x2, bs, bc, cfg, w=None):
+    if w is None:                       # no downstream weight: mask-only
+        return _impl_pallas(x2, bs, bc, cfg)
+    out, bitmap, measured = _run_fused(x2, w, bs, bc, cfg)
+    return out, bitmap, measured, w.shape[-1]
+
+
+_INFER_IMPLS: dict[str, Callable] = {
+    "pallas": _impl_pallas,
+    "stream": _impl_stream,
+    "fused": _impl_fused,
+}
+
+
+def register_engine_backend(spec: BackendSpec, infer_impl: Callable,
+                            forward_variant: Callable | None = None
+                            ) -> BackendSpec:
+    """Register a new execution backend end-to-end: declare its
+    capabilities in the :mod:`core.backends` registry and provide the
+    infer-path impl ``(x2, bs, bc, cfg, w) -> (y2, bitmap,
+    measured_bytes, n_cols|None)``. A ``trainable`` spec must also bring
+    its forward pipeline ``(x2, statics) -> (y2, bitmap, n_live)`` —
+    registered under ``spec.grad_variant`` so train mode dispatches the
+    same launches through the shared custom_vjp (``kernels.grad``) —
+    unless it reuses a built-in variant. Model code needs no changes —
+    every site already dispatches through :func:`zebra_site` by name."""
+    from ..kernels import grad
+    if forward_variant is not None:
+        grad.register_forward_variant(spec.grad_variant, forward_variant)
+    elif spec.trainable and spec.name != "reference" \
+            and not grad.has_forward_variant(spec.grad_variant):
+        raise ValueError(
+            f"backend {spec.name!r} declares trainable=True with unknown "
+            f"grad_variant {spec.grad_variant!r}; pass forward_variant= or "
+            f"reuse a built-in variant")
+    backends.register_backend(spec)
+    _INFER_IMPLS[spec.name] = infer_impl
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Capability resolution
+# ---------------------------------------------------------------------------
+
+def _resolve_backend(spec: BackendSpec, *, mode: str, tnet,
+                     degenerate: bool) -> tuple[str, str | None]:
+    """Map one site's situation onto a backend the spec can serve.
+
+    Returns ``(final backend name, degrade reason | None)`` — the single
+    place train/infer/shape legality is decided (no implicit rules at
+    call sites)."""
+    if spec.name == "reference":
+        return "reference", None
+    if mode == "train" and not spec.trainable:
+        return "reference", "not-trainable"
+    if mode == "train" and tnet is not None:
+        return "reference", "tnet"      # learned per-sample thresholds + the
+                                        # Eq. 1 threshold gradient are jnp-only
+    if degenerate:
+        return "reference", "degenerate-rows"
+    return spec.name, None
+
+
+def _log_degrade(site: str, requested: str, reason: str) -> None:
+    key = (site, requested, reason)
+    if key not in _DEGRADE_LOGGED:
+        _DEGRADE_LOGGED.add(key)
+        _log.info("zebra_site %r: backend %r degraded to reference (%s)",
+                  site, requested, reason)
+
+
+def wants_fused(cfg: ZebraConfig, site: str = "") -> bool:
+    """True when this site should hand its downstream weight to the
+    engine: the configured backend consumes ``w`` AND the capability
+    resolution keeps it (a train-mode request on a non-trainable
+    w-consumer degrades, so the caller keeps its dense matmul and remat
+    annotations)."""
+    if not cfg.enabled:
+        return False
+    spec = backend_spec(cfg.backend_for(site))
+    if not spec.consumes_w or spec.name == "reference":
+        return False
+    final, _ = _resolve_backend(spec, mode=cfg.mode, tnet=None,
+                                degenerate=False)
+    return final == spec.name
+
+
+# ---------------------------------------------------------------------------
+# The engine entry point
+# ---------------------------------------------------------------------------
 
 def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
                layout: str = "tokens", tnet: dict | None = None,
@@ -304,26 +474,30 @@ def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
     x       ``tokens``: (..., S, D) activation map (leading dims = batch);
             ``nchw``: (B, C, H, W) CNN map.
     site    name used for per-site backend overrides (cfg.site_backends).
-    tnet    threshold-net params (train mode, reference backend only).
-    w       downstream weight (K, N) — required by the fused backend,
-            which then returns ``mask(x) @ w`` instead of the masked map.
+    tnet    threshold-net params (tnet-train sites resolve to reference).
+    w       downstream weight (K, N) — only for backends whose spec
+            declares ``consumes_w``; the site then returns ``mask(x) @ w``
+            instead of the masked map.
+
+    Works in train and infer mode on every backend: train-mode kernel
+    dispatch goes through ``kernels.grad.zebra_kernel_trainable``
+    (custom_vjp), so ``jax.grad`` through a pallas/stream site equals the
+    reference path. Capability misses degrade to reference with the
+    reason in ``SiteAux.backend`` (see module docstring).
 
     Returns ``(y, SiteAux)``. Without ``w``, y is the masked map (bitwise
     identical across reference/pallas/stream). With ``w`` (fused), y is
     the downstream product with dead blocks skipped.
     """
-    backend = cfg.backend_for(site)
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown zebra backend {backend!r} "
-                         f"(site={site!r}); expected one of {BACKENDS}")
-    if w is not None and backend != "fused":
-        raise ValueError("w is only consumed by the fused backend; apply "
-                         "the downstream matmul at the call site instead")
+    spec = backend_spec(cfg.backend_for(site))
+    if w is not None and not spec.consumes_w:
+        raise ValueError(
+            f"backend {spec.name!r} does not consume a downstream weight "
+            f"(site={site!r}); apply the matmul at the call site instead")
     if not cfg.enabled:
         return (x if w is None else x @ w), SiteAux.empty()
-    if cfg.mode == "train":
-        backend = "reference"           # gradients + threshold nets are jnp
-                                        # (w degrades to a dense matmul there)
+    tnet = effective_tnet(cfg, tnet)
+    require_tnet(cfg, tnet, site)
 
     # ---- layout -> 2-D tile grid + effective blocks -----------------------
     if layout == "nchw":
@@ -347,36 +521,57 @@ def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
     else:
         raise ValueError(f"unknown layout {layout!r}")
 
-    if backend != "reference" and degenerate:
-        backend = "reference"           # 1-row decode tiles: nothing to skip
+    backend, reason = _resolve_backend(spec, mode=cfg.mode, tnet=tnet,
+                                       degenerate=degenerate)
+    if reason is not None:
+        _log_degrade(site, spec.name, reason)
+    label = backend if reason is None else f"{backend}({reason})"
 
-    # ---- reference: the jnp path (train semantics live here) --------------
+    # ---- reference: the jnp path (threshold nets live here) ---------------
     if backend == "reference":
         fn = zebra_cnn if layout == "nchw" else zebra_tokens
         y, aux = fn(x, cfg, tnet)
-        if w is not None:               # fused request degraded to reference
+        if w is not None:               # w-consuming request degraded here
             y = y @ w
         return y, SiteAux(reg=aux["reg"], zero_frac=aux["zero_frac"],
-                          measured_bytes=jnp.float32(0.0),
+                          measured_bytes=jnp.int32(0),
                           n_blocks=aux["n_blocks"],
-                          thresholds=aux["thresholds"], backend="reference")
+                          thresholds=aux["thresholds"], backend=label)
 
     # ---- kernel backends on the flattened (M, K) grid ---------------------
     x2 = x.reshape(dims)
-    if backend == "pallas":
-        y2, bitmap, measured = _run_pallas(x2, bs, bc, cfg)
+    if cfg.mode == "train":
+        # trainable kernel path: custom_vjp forward = the same kernel
+        # pipeline infer dispatches, backward = the configured gradient
+        # mode (kernels.grad)
+        from ..kernels.grad import zebra_kernel_trainable
+        statics = _kernel_statics(spec.grad_variant, x2, bs, bc, cfg)
+        y2, _, _ = zebra_kernel_trainable(x2, statics)
+        # Observables are recomputed from the stop-gradient'd masked map,
+        # NOT from the launch's bitmap/n_live outputs: integer custom_vjp
+        # outputs materialize float0 tangents under jax.checkpoint'd layer
+        # bodies (remat) that downstream arithmetic cannot consume. Live
+        # blocks keep their values bitwise, so blockmax(|y|) >= t_obj IS
+        # the kernel's keep bitmap (dead blocks are exact zeros).
+        yd = jax.lax.stop_gradient(y2)
+        ydb = yd.reshape(dims[0] // bs, bs, dims[1] // bc, bc)
+        keep = (jnp.max(jnp.abs(ydb), axis=(1, 3))
+                >= jnp.asarray(cfg.t_obj, yd.dtype))
+        measured = (stream_bytes(jnp.sum(keep.astype(jnp.int32)), bs, bc,
+                                 x2.dtype, keep.size)
+                    if spec.emits_stream else jnp.int32(0))
         y = y2.reshape(x.shape)
-    elif backend == "stream":
-        y2, bitmap, measured = _run_stream(x2, bs, bc, cfg)
-        y = y2.reshape(x.shape)
-    else:  # fused
-        if w is None:                   # no downstream weight: mask-only
-            y2, bitmap, measured = _run_pallas(x2, bs, bc, cfg)
-            y = y2.reshape(x.shape)
-        else:
-            y2, bitmap, measured = _run_fused(x2, w, bs, bc, cfg)
-            y = y2.reshape(*x.shape[:-1], w.shape[-1])
+        zero_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        # realized Eq. 1 observable under the deployed constant thresholds
+        reg = zero_frac * nb_sample
+        return y, SiteAux(reg=reg, zero_frac=zero_frac,
+                          measured_bytes=measured, n_blocks=nb_sample,
+                          thresholds=None, backend=label)
+
+    y2, bitmap, measured, n_cols = _INFER_IMPLS[backend](x2, bs, bc, cfg, w)
+    y = (y2.reshape(x.shape) if n_cols is None
+         else y2.reshape(*x.shape[:-1], n_cols))
     zero_frac = 1.0 - jnp.mean(bitmap.astype(jnp.float32))
     return y, SiteAux(reg=jnp.float32(0.0), zero_frac=zero_frac,
                       measured_bytes=measured, n_blocks=nb_sample,
-                      thresholds=None, backend=backend)
+                      thresholds=None, backend=label)

@@ -20,6 +20,13 @@ Training-mode gradient semantics (paper-faithful default ``grad_mode=
 receive gradient *only* from the L2 regularizer pulling them to ``T_obj``
 (Eq. 1), surviving blocks receive the task gradient. ``"ste"`` and
 ``"soft"`` are beyond-paper trainability variants.
+
+Constant-threshold training (``tnet=None`` in train mode, or
+``use_tnet=False``): the deployed ``T_obj`` comparator is the forward
+gate for *all* gradient modes — the mode only selects the backward
+surrogate — so train-time gating matches inference masking exactly.
+This is the semantics the kernel backends reproduce via ``custom_vjp``
+(``kernels.grad``); the reg slot reports the realized zero-block count.
 """
 from __future__ import annotations
 
@@ -43,6 +50,10 @@ class ZebraConfig:
     mode: str = "train"          # "train" (threshold net) | "infer" (T_obj)
     grad_mode: str = "hard"      # "hard" (paper) | "ste" | "soft"
     soft_temp: float = 0.05
+    use_tnet: bool = True        # train with a learned threshold net; False
+                                 # = constant-T_obj (deployment-matched)
+                                 # training, which the kernel backends can
+                                 # serve through jax.custom_vjp
     act_bits: int = 16           # B in Eq. 2 (bf16 activations on TPU)
     # --- site-engine execution (core.engine) ---
     backend: str = "reference"   # reference | pallas | stream | fused
@@ -52,6 +63,16 @@ class ZebraConfig:
                                  # per-launch VMEM working-set cap the tile
                                  # chooser (tiles_for) sizes comparator
                                  # tiles against (~half a 16 MB core)
+
+    def __post_init__(self):
+        # config-time validation against the capability registry — a typo'd
+        # backend fails where the config is built, not at first dispatch
+        from .backends import validate_backend
+        if self.backend:
+            validate_backend(self.backend)
+        for _, name in self.site_backends:
+            if name:
+                validate_backend(name)
 
     def replace(self, **kw) -> "ZebraConfig":
         return dataclasses.replace(self, **kw)
@@ -133,10 +154,23 @@ def _expand_mask_bsd(mask_blocks: jax.Array, bs: int, bc: int) -> jax.Array:
 
 
 def _apply_gate(x: jax.Array, keep: jax.Array, blockmax: jax.Array,
-                thr: jax.Array, cfg: ZebraConfig, expand) -> jax.Array:
-    """Gate x by the block keep-mask under the configured gradient mode."""
+                thr: jax.Array, cfg: ZebraConfig, expand,
+                surrogate_only: bool = False) -> jax.Array:
+    """Gate x by the block keep-mask under the configured gradient mode.
+
+    ``surrogate_only`` (constant-threshold / deployment-matched training):
+    the *value* is always the deployed hard mask — the gradient mode only
+    picks the backward surrogate, so the train-time gating function is
+    exactly the inference comparator (and exactly what the kernel
+    backends' custom_vjp computes, see ``kernels.grad``).
+    """
     if cfg.grad_mode == "soft" and cfg.mode == "train":
         gate = jax.nn.sigmoid((blockmax - thr) / cfg.soft_temp)
+        if surrogate_only:
+            # value: hard mask; dy/dx: the sigmoid surrogate gate
+            mask = expand(jax.lax.stop_gradient(keep)).astype(x.dtype)
+            ge = expand(jax.lax.stop_gradient(gate)).astype(x.dtype)
+            return x * ge + jax.lax.stop_gradient(x * mask - x * ge)
         return x * expand(gate).astype(x.dtype)
     mask = expand(jax.lax.stop_gradient(keep)).astype(x.dtype)
     y = x * mask
@@ -150,6 +184,27 @@ def _reg_loss(thr: jax.Array, t_obj: float) -> jax.Array:
     """Σ_c ||T_obj − T_c||², averaged over the batch dim (Eq. 1 second term)."""
     per_sample = jnp.sum(jnp.square(t_obj - thr.astype(jnp.float32)), axis=-1)
     return jnp.mean(per_sample)
+
+
+def effective_tnet(cfg: ZebraConfig, tnet):
+    """``use_tnet=False`` is authoritative: gate with the constant T_obj
+    even if legacy net params are passed (their Eq. 1 L2 term is excluded
+    from the loss in that mode, so gating with them would silently train
+    un-regularized thresholds)."""
+    return tnet if cfg.use_tnet else None
+
+
+def require_tnet(cfg: ZebraConfig, tnet, site: str = "") -> None:
+    """Train mode with ``use_tnet=True`` must receive threshold-net params:
+    silently training the constant-T_obj gate instead would change the
+    objective. The ONE guard shared by zebra_cnn/zebra_tokens and the
+    engine."""
+    if cfg.mode == "train" and tnet is None and cfg.use_tnet:
+        at = f" at site {site!r}" if site else ""
+        raise ValueError(
+            f"train mode expects threshold-net params{at} (use_tnet=True); "
+            f"pass tnet, or set use_tnet=False for constant-threshold "
+            f"(kernel-trainable) training")
 
 
 # ---------------------------------------------------------------------------
@@ -168,22 +223,30 @@ def zebra_cnn(x: jax.Array, cfg: ZebraConfig, tnet: dict | None = None) -> tuple
     b = cfg.block_hw
     if H % b or W % b:
         raise ValueError(f"map {H}x{W} not divisible by block {b}")
+    tnet = effective_tnet(cfg, tnet)
+    require_tnet(cfg, tnet)
     blockmax = _block_reduce_max_nchw(x, b)                       # (B,C,Hb,Wb)
-    if cfg.mode == "train":
-        if tnet is None:
-            raise ValueError("train mode needs threshold-net params")
+    surrogate_only = False
+    if cfg.mode == "train" and tnet is not None:
         gap = jnp.mean(x, axis=(2, 3)).astype(jnp.float32)        # (B,C) GAP
         thr = _thresholds_from_net(tnet, gap)                     # (B,C)
         reg = _reg_loss(thr, cfg.t_obj)
         thr_b = thr[:, :, None, None].astype(blockmax.dtype)
     else:
-        thr = jnp.full((C,), cfg.t_obj, jnp.float32)              # Fig. 3
-        reg = jnp.float32(0.0)
+        # infer, or constant-threshold (deployment-matched) training: the
+        # deployed T_obj comparator is the gate (Fig. 3); in train mode the
+        # reg slot reports the realized zero-block count (Eq. 1 observable)
+        thr = jnp.full((C,), cfg.t_obj, jnp.float32)
+        reg = None if cfg.mode == "train" else jnp.float32(0.0)
         thr_b = thr[None, :, None, None].astype(blockmax.dtype)
+        surrogate_only = cfg.mode == "train"
     keep = (blockmax >= thr_b)
-    y = _apply_gate(x, keep, blockmax, thr_b, cfg, lambda m: _expand_mask_nchw(m, b))
+    y = _apply_gate(x, keep, blockmax, thr_b, cfg,
+                    lambda m: _expand_mask_nchw(m, b), surrogate_only)
     zero_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
     n_blocks = C * (H // b) * (W // b)
+    if reg is None:
+        reg = jax.lax.stop_gradient(zero_frac) * n_blocks
     return y, {"reg": reg, "zero_frac": zero_frac, "n_blocks": n_blocks,
                "thresholds": thr}
 
@@ -197,23 +260,28 @@ def zebra_tokens(x: jax.Array, cfg: ZebraConfig, tnet: dict | None = None) -> tu
     bs, bc = cfg.block_seq, cfg.block_ch
     if S % bs or D % bc:
         raise ValueError(f"(S={S}, D={D}) not divisible by block ({bs},{bc})")
+    tnet = effective_tnet(cfg, tnet)
+    require_tnet(cfg, tnet)
     blockmax = _block_reduce_max_bsd(x, bs, bc)                   # (B,Sb,Db)
-    if cfg.mode == "train":
-        if tnet is None:
-            raise ValueError("train mode needs threshold-net params")
+    surrogate_only = False
+    if cfg.mode == "train" and tnet is not None:
         gap = jnp.mean(jnp.abs(x), axis=1).astype(jnp.float32)    # (B,D) GAP
         thr_ch = _thresholds_from_net(tnet, gap)                  # (B,Db)
         reg = _reg_loss(thr_ch, cfg.t_obj)
         thr_b = thr_ch[:, None, :].astype(blockmax.dtype)         # (B,1,Db)
     else:
-        reg = jnp.float32(0.0)
+        # infer, or constant-threshold (deployment-matched) training
+        reg = None if cfg.mode == "train" else jnp.float32(0.0)
         thr_b = jnp.asarray(cfg.t_obj, blockmax.dtype)
         thr_ch = None
+        surrogate_only = cfg.mode == "train"
     keep = (blockmax >= thr_b)
     y = _apply_gate(x, keep, blockmax, thr_b, cfg,
-                    lambda m: _expand_mask_bsd(m, bs, bc))
+                    lambda m: _expand_mask_bsd(m, bs, bc), surrogate_only)
     zero_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
     n_blocks = (S // bs) * (D // bc)
+    if reg is None:
+        reg = jax.lax.stop_gradient(zero_frac) * n_blocks
     return y, {"reg": reg, "zero_frac": zero_frac, "n_blocks": n_blocks,
                "thresholds": thr_ch}
 

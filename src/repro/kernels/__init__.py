@@ -7,4 +7,5 @@ materializing the dense masked map."""
 from .ops import (zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden,  # noqa: F401
                   zebra_mask_pack_op, zebra_spmm_cs_op,
                   zebra_pack_op, zebra_unpack_op)
+from .grad import KernelStatics, zebra_kernel_trainable  # noqa: F401
 from . import ref  # noqa: F401

@@ -7,6 +7,7 @@ the sharded KV cache (+ Zebra KV-cache block compression accounting).
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 
 import jax
@@ -84,7 +85,7 @@ def main() -> None:
     # (no block-divisible site) case internally
     n_blocks = float(aux.n_blocks)
     zebra_zero_frac = float(aux.zero_frac)
-    measured_bytes = float(aux.measured_bytes)
+    measured_bytes = float(aux.measured_bytes_exact())  # exact past 16 MiB
     if backend in ("stream", "fused"):
         state = transport_state_compressed(state, cfg)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -112,7 +113,10 @@ def main() -> None:
     print("  sample continuation:", gen[0, :16].tolist())
 
 
-def transport_state_compressed(state, cfg):
+_SPOT_CHECK = itertools.count()        # rotates the sampled leaf per call
+
+
+def transport_state_compressed(state, cfg, sample_leaf: int | None = None):
     """The prefill -> decode handoff in compressed stream form: pack every
     compatible cache leaf (lossless nonzero-block bitmap), count the bytes
     actually moved, reconcile against Eq. 2/3, and hand the caches to the
@@ -120,7 +124,11 @@ def transport_state_compressed(state, cfg):
     crosses the jit boundary, and ``steps.make_generate`` unpacks it
     inside the decode dispatch. Losslessness (pinned exhaustively by
     tests/test_compress.py) is spot-checked on one sampled leaf so the
-    handoff doesn't pay a second full decompression for a print."""
+    handoff doesn't pay a second full decompression for a print — the
+    sample rotates across calls within a process (long-running servers /
+    test suites cover every leaf; pin one with ``sample_leaf``). The Eq.
+    2/3 reconcile bound is asserted for EVERY leaf individually —
+    ``meter.reconcile`` raises on the first leaf outside it."""
     from ..compress import (BandwidthMeter, CompressedMap, compress_tree,
                             decompress)
 
@@ -132,15 +140,23 @@ def transport_state_compressed(state, cfg):
     sampled = [(a, c) for a, c in zip(
         jax.tree_util.tree_leaves(caches),
         jax.tree_util.tree_leaves(ccaches, is_leaf=is_cm)) if is_cm(c)]
-    ok = (bool(jnp.array_equal(sampled[0][0], decompress(sampled[0][1])))
-          if sampled else True)
-    rec = meter.reconcile()
+    idx = 0
+    ok = True
+    if sampled:
+        idx = (next(_SPOT_CHECK) if sample_leaf is None else sample_leaf) \
+            % len(sampled)
+        ok = bool(jnp.array_equal(sampled[idx][0], decompress(sampled[idx][1])))
+    # raises per leaf if any measured-predicted delta leaves the
+    # index-padding bound (+1 B float-roundoff slack) — no leaf can hide
+    # behind the max in the report below
+    rec = meter.reconcile(tol_bytes_per_map=1.0)
     print("[serve] compressed KV-cache transport (prefill -> decode, "
           "payload form):")
     print(meter.report())
-    print(f"  lossless (sampled leaf): {ok}  reconcile: {rec['n_sites']} "
-          f"sites, max |measured - predicted| = "
-          f"{rec['max_abs_delta_bytes']:.2f} B (index-padding bound)")
+    print(f"  lossless (sampled leaf {idx + 1}/{max(len(sampled), 1)}): {ok}"
+          f"  reconcile: {rec['n_sites']} sites, every leaf within the "
+          f"index-padding bound, max |measured - predicted| = "
+          f"{rec['max_abs_delta_bytes']:.2f} B")
     if rec["n_sites"] == 0:
         print("  WARNING: no cache leaf was block-divisible — every leaf "
               "moved dense; pick batch/prompt-len/gen so that "

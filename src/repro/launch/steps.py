@@ -70,6 +70,8 @@ def make_train_step(model: LM, opt, mesh, compress: str = "bf16",
                 enc = (enc.reshape(K, B // K, *enc.shape[1:])
                        if enc is not None else None)
 
+                from ..core.engine import MB_BASE, add_byte_pair
+
                 def micro(acc, i):
                     g_acc, l_acc, m_acc = acc
                     e_i = enc[i] if enc is not None else None
@@ -77,18 +79,37 @@ def make_train_step(model: LM, opt, mesh, compress: str = "bf16",
                         params, toks[i], e_i)
                     g_acc = jax.tree_util.tree_map(
                         lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                    m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+                    # the byte pair takes the exact int32-carry add (a
+                    # plain f32 add rounds the lo legs past 2**24); the
+                    # f32 display value is dropped and rebuilt after the
+                    # scan — no point accumulating a rounding readout
+                    m = dict(m)
+                    m.pop("measured_bytes")
+                    hi, lo = add_byte_pair(
+                        m_acc["measured_bytes_hi"], m_acc["measured_bytes_lo"],
+                        m.pop("measured_bytes_hi"), m.pop("measured_bytes_lo"))
+                    m_acc = dict({k: m_acc[k] + m[k] for k in m},
+                                 measured_bytes_hi=hi, measured_bytes_lo=lo)
                     return (g_acc, l_acc + l, m_acc), None
 
                 g0 = jax.tree_util.tree_map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params)
                 m0 = {k: jnp.float32(0.0) for k in
-                      ("ce", "zebra_reg", "zero_frac", "router_aux")}
+                      ("ce", "zebra_reg", "zero_frac", "router_aux",
+                       "measured_bytes_hi", "measured_bytes_lo")}
                 (grads, loss, metrics), _ = jax.lax.scan(
                     micro, (g0, jnp.float32(0.0), m0), jnp.arange(K))
                 grads = jax.tree_util.tree_map(lambda g: g / K, grads)
                 loss = loss / K
-                metrics = jax.tree_util.tree_map(lambda m: m / K, metrics)
+                # bytes are extensive (total moved for the whole global
+                # batch), not a per-microbatch mean like ce/zero_frac —
+                # the (hi, lo) legs stay the exact accumulated pair
+                bkeys = ("measured_bytes_hi", "measured_bytes_lo")
+                metrics = {k: (v if k in bkeys else v / K)
+                           for k, v in metrics.items()}
+                metrics["measured_bytes"] = (
+                    metrics["measured_bytes_hi"] * jnp.float32(MB_BASE)
+                    + metrics["measured_bytes_lo"])
             grads, comp_state = compressed_gradients(
                 grads, state["compress"], compress)
             grads, gnorm = clip_by_global_norm(grads, grad_clip)

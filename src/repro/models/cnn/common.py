@@ -36,10 +36,13 @@ class ZebraSites:
         self._i = 0
 
     # ---- init-time ----
-    def init_site(self, key, channels: int) -> tuple[str, dict]:
+    def init_site(self, key, channels: int) -> tuple[str, dict | None]:
         name = f"z{self._i}"
         self._i += 1
-        return name, init_threshold_net(key, channels)
+        # use_tnet=False: constant-T_obj (deployment-matched) training —
+        # no net, and the kernel backends stay trainable at this site
+        tnet = init_threshold_net(key, channels) if self.zcfg.use_tnet else None
+        return name, tnet
 
     # ---- apply-time ----
     def __call__(self, x: jax.Array, zebra_params: dict | None) -> jax.Array:
@@ -49,8 +52,9 @@ class ZebraSites:
         b = site_block(H, W, self.zcfg.block_hw)
         cfg = self.zcfg.replace(block_hw=b)
         tnet = zebra_params.get(name) if zebra_params else None
-        if cfg.mode == "train" and tnet is None:
-            cfg = cfg.replace(enabled=False)   # site without a net: passthrough
+        if cfg.mode == "train" and tnet is None and cfg.use_tnet:
+            cfg = cfg.replace(enabled=False)   # net expected but missing:
+                                               # passthrough (legacy ckpts)
         y, aux = zebra_site(x, cfg, site=name, layout="nchw", tnet=tnet)
         self.auxes.append(aux)
         self.specs.append(MapSpec(c=C, h=H, w=W, bits=cfg.act_bits, block=b))

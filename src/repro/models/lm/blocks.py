@@ -85,7 +85,7 @@ def init_layer(key, typ: str, cfg: LMConfig, dtype, cross: bool = False) -> dict
             p["moe"] = moe_init(ks[2], cfg, dtype)
         else:
             p["ffn"] = ffn_init(ks[2], cfg, dtype)
-    if cfg.zebra_enabled and "layer_out" in cfg.zebra_sites:
+    if cfg.zebra_enabled and "layer_out" in cfg.zebra_sites and cfg.zebra_tnet:
         from .ffn import eff_block_ch
         nblk = cfg.d_model // eff_block_ch(cfg.d_model, cfg)
         p["zebra_out_tnet"] = init_token_threshold_net(ks[3], cfg.d_model, nblk)

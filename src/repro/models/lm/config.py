@@ -82,6 +82,11 @@ class LMConfig:
     zebra_site_backends: tuple[tuple[str, str], ...] = ()
                                      # per-site overrides, e.g.
                                      # (("kv_cache", "stream"),)
+    zebra_tnet: bool = True          # learned threshold nets at Zebra sites;
+                                     # False = constant-T_obj (deployment-
+                                     # matched) training, which the kernel
+                                     # backends serve through custom_vjp —
+                                     # tnet sites always resolve to reference
 
     def __post_init__(self):
         if self.head_dim == 0:

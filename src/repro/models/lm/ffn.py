@@ -21,7 +21,7 @@ def zebra_cfg_for(cfg: LMConfig, mode: str) -> ZebraConfig:
     backend = cfg.zebra_backend or ("stream" if cfg.use_kernel else "reference")
     return ZebraConfig(enabled=cfg.zebra_enabled, t_obj=cfg.zebra_t_obj,
                        block_seq=cfg.zebra_block_seq, block_ch=cfg.zebra_block_ch,
-                       mode=mode, backend=backend,
+                       mode=mode, backend=backend, use_tnet=cfg.zebra_tnet,
                        site_backends=tuple(cfg.zebra_site_backends))
 
 
@@ -54,7 +54,7 @@ def ffn_init(key, cfg: LMConfig, dtype):
         p["b_up"] = jnp.zeros((f,), dtype)
         p["b_down"] = jnp.zeros((d,), dtype)
     p["w_down"] = lecun_normal(ks[2], (f, d), dtype, fan_in=f)
-    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites:
+    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites and cfg.zebra_tnet:
         p["zebra_tnet"] = init_token_threshold_net(ks[3], f, f // eff_block_ch(f, cfg))
     return p
 
@@ -67,9 +67,11 @@ def ffn_apply(p, x, cfg: LMConfig, mode: str):
         h = jax.nn.gelu(x @ p["w_up"].astype(cdt) + p["b_up"].astype(cdt))
     h = hint_tokens(h, "model")           # hidden map d_ff TP-sharded
     zc = _hidden_site_cfg(cfg, mode)
-    if mode == "infer" and wants_fused(zc, "ffn_hidden"):
+    if wants_fused(zc, "ffn_hidden"):
         # fused backend: w_down consumes the keep bitmap (zebra_spmm skips
         # dead blocks) — the masked hidden map is never re-read densely.
+        # Capability resolution (not a mode check here) decides legality:
+        # train-mode requests degrade inside wants_fused.
         y, zaux = zebra_site(h, zc, site="ffn_hidden",
                              w=p["w_down"].astype(cdt))
     else:
@@ -95,7 +97,7 @@ def moe_init(key, cfg: LMConfig, dtype):
         "w_up": lecun_normal(ks[2], (E, d, f), dtype),
         "w_down": lecun_normal(ks[3], (E, f, d), dtype, fan_in=f),
     }
-    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites:
+    if cfg.zebra_enabled and "ffn_hidden" in cfg.zebra_sites and cfg.zebra_tnet:
         p["zebra_tnet"] = init_token_threshold_net(ks[4], f, f // eff_block_ch(f, cfg))
     return p
 
@@ -175,17 +177,27 @@ def moe_apply_dp(p, x, cfg: LMConfig, mode: str, mesh, dp_axes_t: tuple):
     def local_fn(p_, x_):
         y, sa, raux = moe_apply(p_, x_, cfg, mode, local=True)
         mean = lambda s: _jax.lax.pmean(s, dp_axes_t)
-        tot = lambda s: _jax.lax.psum(s, dp_axes_t)
-        nb = jnp.float32(sa.n_blocks)
+        tot_i = lambda s: _jax.lax.psum(s, dp_axes_t)
+        la = LayerAux.of_site(sa)
+        # psum the per-shard bytes (int32-exact per shard) split at base
+        # 2**16: each int32 leg sum stays far from overflow up to ~32k DP
+        # shards, keeping the accounting exact end-to-end — an f32 psum
+        # would round near 2**24, an unsplit int32 psum overflows at 128
+        mb = jnp.asarray(sa.measured_bytes).astype(jnp.int32)
         return (y, mean(jnp.float32(sa.reg)),
-                mean(jnp.float32(sa.zero_frac) * nb), nb,
-                tot(jnp.float32(sa.measured_bytes)), mean(raux))
+                mean(la.zf_blocks), la.n_blocks,
+                tot_i(mb // 65536), tot_i(mb % 65536), mean(raux))
 
-    y, reg, zfb, nb, mb, raux = _jax.shard_map(
+    y, reg, zfb, nb, hi16, lo16, raux = _jax.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), P(dp_axes_t, None, None)),
-        out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P(), P()),
+        out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )(p, x)
+    # recombine the 2**16-base legs into the (mb_hi, mb_lo) 2**24 pair in
+    # int32 (exact), then cast each leg to f32 (each < 2**24: exact)
+    rem = (hi16 % 256) * 65536 + lo16
+    mb_hi = (hi16 // 256 + rem // 16777216).astype(jnp.float32)
+    mb_lo = (rem % 16777216).astype(jnp.float32)
     return y, LayerAux(reg=reg, zf_blocks=zfb, n_blocks=nb,
-                       measured_bytes=mb, router_aux=raux)
+                       mb_hi=mb_hi, mb_lo=mb_lo, router_aux=raux)

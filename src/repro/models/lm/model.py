@@ -191,11 +191,21 @@ class LM:
 
         zreg, raux = aux.reg, aux.router_aux
         zero_frac = aux.zero_frac        # block-weighted, div-by-zero guarded
-        total = cfg.zebra_t_obj * 0 + ce + zreg   # λ=1 fold; reg already summed
+        # constant-threshold mode (zebra_tnet=False): Eq. 1's trainable L2
+        # term is identically zero and aux.reg carries the realized
+        # zero-block COUNT — a metrics observable, not a loss term
+        total = ce + (zreg if cfg.zebra_tnet else 0.0)   # λ=1 fold
         if cfg.is_moe:
             total = total + cfg.router_aux_coef * raux
         metrics = {"ce": ce, "zebra_reg": zreg, "zero_frac": zero_frac,
-                   "router_aux": raux}
+                   "router_aux": raux,
+                   # live on trainable stream-backend sites: f32 display
+                   # readout + the exact (hi, lo) legs so the byte count
+                   # survives >16 MiB totals (combine on host as
+                   # hi * 2**24 + lo)
+                   "measured_bytes": aux.measured_bytes,
+                   "measured_bytes_hi": aux.mb_hi,
+                   "measured_bytes_lo": aux.mb_lo}
         return total, metrics
 
     # ------------------------------------------------------------------

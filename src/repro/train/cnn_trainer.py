@@ -14,12 +14,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (ZebraConfig, collect_zebra_loss, mean_zero_frac,
-                    reduced_bandwidth_pct, slimming, weight_pruning)
+from ..core import (LayerAux, ZebraConfig, collect_zebra_loss,
+                    mean_zero_frac, reduced_bandwidth_pct, slimming,
+                    weight_pruning)
 from ..data import ImageDatasetConfig, StreamingLoader, image_batch
 from ..models.cnn import build as build_cnn
 from ..models.cnn.common import accuracy, cross_entropy, topk_accuracy
 from ..optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+def _sum_bytes(auxes) -> LayerAux:
+    """Exact cross-site byte accumulation (the (mb_hi, mb_lo) pair)."""
+    acc = LayerAux.zero()
+    for a in auxes:
+        acc = acc + LayerAux.of_site(a)
+    return acc
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,12 +74,23 @@ class CNNTrainer:
         logits, new_bn, auxes = self.model.apply(variables, images, train, zcfg)
         ce = cross_entropy(logits, labels)
         zreg = collect_zebra_loss(auxes)
-        loss = self.cfg.zebra.lambda_ce * ce + zreg
+        # with use_tnet=False the reg slot is the realized zero-block count
+        # (gradient-free observable) — Eq. 1's trainable term is zero, so it
+        # stays out of the loss
+        loss = self.cfg.zebra.lambda_ce * ce + \
+            (zreg if self.cfg.zebra.use_tnet else 0.0)
         if self.cfg.ns_rho > 0:
             loss = loss + self.cfg.ns_rho * slimming.gamma_l1(trainable["params"])
+        acc_bytes = _sum_bytes(auxes)
         metrics = {"ce": ce, "zebra_reg": zreg,
                    "acc": accuracy(logits, labels),
-                   "zero_frac": mean_zero_frac(auxes)}
+                   "zero_frac": mean_zero_frac(auxes),
+                   # nonzero when training through the stream backend; the
+                   # (hi, lo) legs keep the count exact past 16 MiB
+                   # (measured_bytes alone is the rounding f32 display)
+                   "measured_bytes": acc_bytes.measured_bytes,
+                   "measured_bytes_hi": acc_bytes.mb_hi,
+                   "measured_bytes_lo": acc_bytes.mb_lo}
         return loss, (new_bn, metrics, auxes)
 
     def _apply_fixed_masks(self, trainable):
@@ -103,15 +123,17 @@ class CNNTrainer:
     def _eval(self, variables, images, labels):
         zcfg = self.cfg.zebra.replace(mode="infer")
         logits, _, auxes = self.model.apply(variables, images, False, zcfg)
+        acc = _sum_bytes(auxes)
         return {"acc": accuracy(logits, labels),
                 "top5": topk_accuracy(logits, labels, k=5),
                 "ce": cross_entropy(logits, labels),
                 "zero_frac": mean_zero_frac(auxes),
                 "zero_fracs": jnp.stack([a["zero_frac"] for a in auxes]),
                 # observed stream bytes per forward (site engine; nonzero
-                # only for the stream/fused backends)
-                "measured_bytes": jnp.sum(jnp.stack(
-                    [jnp.float32(a["measured_bytes"]) for a in auxes]))}
+                # only for the stream/fused backends); the (hi, lo) legs
+                # let the host read the total exactly past 16 MiB
+                "measured_bytes_hi": acc.mb_hi,
+                "measured_bytes_lo": acc.mb_lo}
 
     # ------------------------------------------------------------------
     def train(self, steps: int | None = None, log_every: int = 50,
@@ -145,7 +167,10 @@ class CNNTrainer:
             top5s.append(float(out["top5"]))
             zfs.append(float(out["zero_frac"]))
             per_site.append(np.asarray(out["zero_fracs"]))
-            mbytes.append(float(out["measured_bytes"]))
+            # exact host-side readout of the (hi, lo) byte pair
+            from ..core.engine import MB_BASE
+            mbytes.append(float(out["measured_bytes_hi"]) * MB_BASE
+                          + float(out["measured_bytes_lo"]))
         specs = self.model.map_specs(cfg.dataset.hw, cfg.zebra)
         site_zf = np.mean(np.stack(per_site), axis=0)
         bw = reduced_bandwidth_pct(specs, list(site_zf))

@@ -87,26 +87,71 @@ def test_fused_backend_ffn_bitwise_matches_reference():
     y1f, a1f = ffn_apply(p, x1, cfg.replace(zebra_backend="fused"), "infer")
     np.testing.assert_array_equal(np.asarray(y1r, np.float32),
                                   np.asarray(y1f, np.float32))
-    assert a1f.backend == "reference"
+    assert a1f.backend == "reference(degenerate-rows)"   # reason surfaced
 
 
-def test_per_site_backend_override_and_train_forces_reference():
+def test_per_site_backend_override_and_capability_degrades():
     x = _blocky_tokens(K, 2, 16, 256, 8, 128)
     cfg = ZebraConfig(t_obj=0.5, mode="infer", backend="pallas",
                       site_backends=(("kv_cache", "stream"),))
     _, a1 = zebra_site(x, cfg, site="ffn_hidden")
     _, a2 = zebra_site(x, cfg, site="kv_cache")
     assert a1.backend == "pallas" and a2.backend == "stream"
-    # train mode: gradients + threshold nets are jnp-only -> reference
+    # threshold-net training: per-sample learned thresholds are jnp-only,
+    # so the capability check resolves to reference WITH the reason
     from repro.core import init_token_threshold_net
     tnet = init_token_threshold_net(K, 256, 2)
     yt, at = zebra_site(x, cfg.replace(mode="train", backend="stream"),
                         tnet=tnet)
-    assert at.backend == "reference"
+    assert at.backend == "reference(tnet)"
     g = jax.grad(lambda xx: jnp.sum(
         zebra_site(xx, cfg.replace(mode="train", backend="stream"),
                    tnet=tnet)[0] ** 2))(x)
     assert np.all(np.isfinite(np.asarray(g)))
+    # fused has no backward rule: train-mode requests degrade with reason
+    _, af = zebra_site(x, cfg.replace(mode="train", backend="fused",
+                                      use_tnet=False))
+    assert af.backend == "reference(not-trainable)"
+    # constant-threshold train mode stays ON the kernel backend
+    _, ak = zebra_site(x, cfg.replace(mode="train", backend="stream",
+                                      use_tnet=False))
+    assert ak.backend == "stream"
+    # use_tnet=False is authoritative: stray legacy net params are ignored
+    # (gating with them would train un-regularized thresholds, since the
+    # loss excludes the Eq. 1 L2 term in this mode)
+    _, ai = zebra_site(x, cfg.replace(mode="train", backend="stream",
+                                      use_tnet=False), tnet=tnet)
+    assert ai.backend == "stream"
+
+
+def test_backend_registry_capabilities_and_config_validation():
+    from repro.core import BackendSpec, backend_names, backend_spec
+
+    assert set(backend_names()) >= {"reference", "pallas", "stream", "fused"}
+    assert backend_spec("reference").trainable
+    assert backend_spec("pallas").trainable and not backend_spec("pallas").emits_stream
+    assert backend_spec("stream").trainable and backend_spec("stream").emits_stream
+    assert not backend_spec("fused").trainable and backend_spec("fused").consumes_w
+    assert backend_spec("pallas").grad_variant == "mask"
+    assert backend_spec("stream").grad_variant == "stream"
+    # a typo'd backend fails at config construction, not at first dispatch
+    with pytest.raises(ValueError, match="unknown zebra backend"):
+        ZebraConfig(backend="bogus")
+    with pytest.raises(ValueError, match="unknown zebra backend"):
+        ZebraConfig(site_backends=(("ffn_hidden", "bogus"),))
+    # w is rejected against the requested spec's consumes_w capability
+    x = _blocky_tokens(K, 2, 16, 256, 8, 128)
+    w = jnp.ones((256, 4), jnp.float32)
+    with pytest.raises(ValueError, match="does not consume"):
+        zebra_site(x, ZebraConfig(t_obj=0.5, mode="infer", backend="stream"),
+                   w=w)
+    # a trainable spec must bring its forward pipeline (or reuse one)
+    from repro.core import register_engine_backend
+    bad = BackendSpec("exotic", trainable=True, emits_stream=False,
+                      consumes_w=False, vmem_bounded=False,
+                      grad_variant="exotic")
+    with pytest.raises(ValueError, match="forward_variant"):
+        register_engine_backend(bad, lambda *a: None)
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +203,68 @@ def test_siteaux_dict_compat_and_layeraux_guard():
         return c + LayerAux.of_site(s), None
     out, _ = jax.lax.scan(body, LayerAux.zero(), jnp.arange(3))
     assert float(out.n_blocks) == 30.0
+
+
+def test_layeraux_byte_pair_exact_past_16mib():
+    """Satellite regression: measured bytes accumulate exactly past the
+    f32 integer limit (2**24 B = 16 MiB). A single f32 accumulator
+    already rounds 2**24 + 1 to 2**24; the (mb_hi, mb_lo) pair doesn't."""
+    per_site = 2 ** 24 + 1                      # unrepresentable in f32
+    assert float(jnp.float32(per_site)) != per_site
+    s = SiteAux(reg=jnp.float32(0.0), zero_frac=jnp.float32(0.0),
+                measured_bytes=jnp.int32(per_site), n_blocks=1)
+    acc = LayerAux.zero()
+    for _ in range(3):
+        acc = acc + LayerAux.of_site(s)
+    assert acc.measured_bytes_exact() == 3 * per_site       # > 48 MiB, exact
+    # and through a lax.scan carry (the form every LM layer stack uses)
+    def body(c, _):
+        return c + LayerAux.of_site(s), None
+    out, _ = jax.lax.scan(body, LayerAux.zero(), jnp.arange(5))
+    assert out.measured_bytes_exact() == 5 * per_site
+    # the lo leg stays renormalized below the base (f32-exact territory)
+    assert float(out.mb_lo) < 2 ** 24 and float(out.mb_hi) == 5.0
+    # odd lo-leg sum crossing the base: an f32 addition would round
+    # 2**24 + 1 to 2**24 before the carry could be extracted
+    a = LayerAux.of_site(SiteAux(measured_bytes=jnp.int32(2 ** 24 - 1),
+                                 n_blocks=1))
+    b = LayerAux.of_site(SiteAux(measured_bytes=jnp.int32(2),
+                                 n_blocks=1))
+    assert (a + b).measured_bytes_exact() == 2 ** 24 + 1
+
+
+def test_transport_state_spot_check_rotates_and_bounds_every_leaf(capsys):
+    """Satellite: serve's compressed KV handoff rotates the losslessness
+    spot-check across leaves (configurable via sample_leaf) and asserts
+    the Eq. 2/3 reconcile bound for every leaf, not just the max."""
+    import re
+    from repro.compress import CompressedMap
+    from repro.launch.serve import transport_state_compressed
+    from repro.models.lm.config import LMConfig
+
+    cfg = LMConfig()                        # block_seq 8, block_ch 128
+    k1 = jax.random.normal(K, (2, 8, 2, 64))            # (..., 16, 128) view
+    k2 = jax.random.normal(jax.random.fold_in(K, 1), (2, 8, 2, 64))
+    state = ([{"sub0": {"k": k1, "v": k2}}], None)
+
+    def sampled_leaf(out):
+        m = re.search(r"lossless \(sampled leaf (\d)/2\): True", out)
+        assert m, out
+        return int(m.group(1))
+
+    ccaches, enc = transport_state_compressed(state, cfg)
+    out1 = capsys.readouterr().out
+    first = sampled_leaf(out1)              # counter is process-global:
+    assert "every leaf within the index-padding bound" in out1
+    leaves = jax.tree_util.tree_leaves(
+        ccaches, is_leaf=lambda l: isinstance(l, CompressedMap))
+    assert all(isinstance(l, CompressedMap) for l in leaves)
+    # second call rotates to the OTHER leaf; explicit index pins one
+    transport_state_compressed(state, cfg)
+    second = sampled_leaf(capsys.readouterr().out)
+    assert {first, second} == {1, 2}
+    transport_state_compressed(state, cfg, sample_leaf=0)
+    assert sampled_leaf(capsys.readouterr().out) == 1
 
 
 def test_infer_bitmap_helpers_respect_enabled():
