@@ -67,6 +67,10 @@ def run_cnn(smoke: bool = False):
     for t in sweep:
         zcfg = ZebraConfig(t_obj=t, mode="infer", backend="stream")
         _, _, auxes = model.apply(variables, x, False, zcfg)
+        # time the jitted per-site sweep like the LM rows (the row used to
+        # hard-code us_per_call=0.0 — the CNN forward was never timed)
+        fwd = jax.jit(lambda xx: model.apply(variables, xx, False, zcfg)[0])
+        us = timeit(fwd, x, iters=3 if smoke else 5, warmup=1)
         max_delta = 0.0
         measured_total = dense_total = 0.0
         for i, (aux, spec) in enumerate(zip(auxes, model.map_specs(hw, zcfg))):
@@ -85,7 +89,7 @@ def run_cnn(smoke: bool = False):
             dense_total += bspec.map_bits / 8.0
         rows.append({
             "name": f"bandwidth/cnn-vgg16/t_obj={t:g}",
-            "us_per_call": 0.0,
+            "us_per_call": us,
             "sites": len(auxes),
             "measured_bytes": int(measured_total),
             "dense_bytes": int(dense_total),
@@ -112,13 +116,13 @@ def run(smoke: bool = False, dtype=jnp.bfloat16):
         x = _blocky_map(key, M, K, bs, bc, dtype)
         for t in sweep:
             y, _ = zebra_mask_op(x, t, bs=bs, bc=bc)
-            # single-pass producer: raw map -> stream in one launch
+            # two-phase producer: raw map -> stream, masked map never built
             cm = compress_masked(x, t, bs=bs, bc=bc)
             np.testing.assert_array_equal(          # transport is lossless
                 np.asarray(decompress(cm)), np.asarray(y))
             r = meter.record(f"{arch}/t_obj={t:g}", cm)
             us = timeit(lambda: compress_masked(x, t, bs=bs, bc=bc).payload,
-                        iters=1 if smoke else 3, warmup=1)
+                        iters=5 if smoke else 9, warmup=2)
             spec = cm.spec()
             rows.append({
                 "name": f"bandwidth/{arch}/t_obj={t:g}",

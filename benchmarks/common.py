@@ -35,14 +35,23 @@ FULL = {"steps": 600, "width": 0.5, "batch": 64, "eval_batches": 8}
 
 
 def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
-    """us per call."""
+    """Median us per call: ``warmup`` untimed calls (compile + cache
+    warm), then the median of ``iters`` individually-timed calls, each
+    synchronized with ``block_until_ready``. Median-of-N instead of
+    mean-of-one-batch: a single GC pause or scheduler hiccup lands in
+    one sample, not in the row — the old mean made fused-vs-composed
+    deltas at the few-percent level pure jitter."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    n = len(times)
+    mid = times[n // 2] if n % 2 else (times[n // 2 - 1] + times[n // 2]) / 2
+    return mid * 1e6
 
 
 def train_cnn(model: str, dataset: ImageDatasetConfig, t_obj: float,

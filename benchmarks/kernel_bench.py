@@ -1,20 +1,32 @@
 """Kernel microbenchmarks (interpret mode on CPU: correctness-grade timing;
-the `derived` column carries the structural numbers that matter on TPU —
+the `derived` columns carry the structural numbers that matter on TPU —
 bytes saved per call, MXU-block skip fraction, and for the fused-vs-
-composed pairs the Pallas launch count and how many times the dense
-(M, K) map crosses HBM per site).
+composed pairs the measured Pallas launch count, the grid coarseness of
+the supertiled kernels and how many dense-map-sized transfers cross HBM
+per site in the TPU design).
 
-Fused-vs-composed pairs (the single-pass streaming engine vs the legacy
-multi-launch pipelines; outputs asserted identical here):
+Fused-vs-composed pairs (the two-phase supertiled streaming engine vs
+the legacy per-block pipelines; outputs asserted identical here):
 
-  producer   zebra_mask_pack (1 launch, read x once)
-             vs zebra_mask -> zebra_pack (2 launches; the dense masked map
-             is written then re-read: 3 dense crossings)
-  stream     zebra_mask_pack -> zebra_unpack (2 launches, 2 dense crossings)
-             vs zebra_mask -> zebra_pack -> zebra_unpack (3 launches, 4)
-  consumer   zebra_mask_pack -> zebra_spmm_cs (2 launches, the GEMM reads
-             the payload — 1 dense crossing)
-             vs zebra_mask -> zebra_spmm (2 launches, 2 dense crossings)
+  producer   zebra_mask_pack (two-phase parallel: supertiled comparator
+             pass + scan + parallel pack; reads x twice, writes only the
+             compressed stream — 2 dense crossings)
+             vs zebra_mask -> zebra_pack (the dense masked map is
+             written then re-read: 3 dense crossings)
+  stream     zebra_mask_pack -> zebra_unpack (3 dense crossings: the
+             expander writes the dense map once)
+             vs zebra_mask -> zebra_pack -> zebra_unpack (4 crossings)
+  consumer   zebra_mask_pack -> zebra_spmm_cs (supertiled GEMM consumes
+             the payload — 2 dense crossings, the masked map never
+             exists)
+             vs zebra_mask -> zebra_spmm (write + re-read the masked
+             map: 3 dense crossings)
+
+`launches` is counted from the traced jaxpr (the structural contract
+tests pin the same numbers), so the column tracks what actually runs on
+this container. `speedup_vs_ref` on a fused row is composed_us/fused_us;
+on the standalone kernel rows it is the row's jnp reference time over
+the kernel time.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ZebraConfig
 from repro.core.engine import stream_bytes
 from repro.kernels import (zebra_mask_op, zebra_mask_pack_op, zebra_pack_op,
                            zebra_spmm_cs_op, zebra_spmm_op, zebra_unpack_op)
@@ -29,14 +42,29 @@ from repro.kernels import ref
 from .common import emit, timeit
 
 
+def _launch_info(fn, *args):
+    """(launch count, [grid sizes]) measured from the traced jaxpr —
+    counted by repro.utils.pallas_eqns, the same walker the structural
+    contract tests use, so the benched and tested numbers cannot drift."""
+    from repro.utils import pallas_grids
+    grids = pallas_grids(jax.make_jaxpr(fn)(*args).jaxpr)
+    return len(grids), [list(g) for g in grids]
+
+
 def _pair_rows(name, fused_fn, composed_fn, fused_meta, composed_meta,
-               iters=3):
+               iters=5):
     t_f = timeit(fused_fn, iters=iters)
     t_c = timeit(composed_fn, iters=iters)
+    lf, gf = _launch_info(fused_fn)
+    lc, gc = _launch_info(composed_fn)
     f = {"name": f"kernel/{name}.fused", "us_per_call": t_f,
-         "pair": name, "variant": "fused", **fused_meta}
+         "pair": name, "variant": "fused", "launches": lf, "grids": gf,
+         "grid_steps": int(sum(np.prod(g) for g in gf)),
+         "speedup_vs_ref": round(t_c / t_f, 2), **fused_meta}
     c = {"name": f"kernel/{name}.composed", "us_per_call": t_c,
-         "pair": name, "variant": "composed", **composed_meta}
+         "pair": name, "variant": "composed", "launches": lc, "grids": gc,
+         "grid_steps": int(sum(np.prod(g) for g in gc)),
+         "speedup_vs_ref": 1.0, **composed_meta}
     return [f, c]
 
 
@@ -48,6 +76,8 @@ def run(budget=None, quick=True) -> list[dict]:
     live = (jax.random.uniform(jax.random.PRNGKey(1), (M // bs, K // bc)) < 0.4)
     x = x * jnp.repeat(jnp.repeat(live.astype(jnp.float32), bs, 0), bc, 1) * 2 + x * 0.01
     w = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+    cfg = ZebraConfig(mode="infer")
+    stm, stk, bn = cfg.tiles_for(M, K, bs, bc, x.dtype, kind="gemm", n=N)
 
     t_ref = timeit(lambda: ref.zebra_mask_ref(x, 0.5, bs, bc), iters=20)
     t_ker = timeit(lambda: zebra_mask_op(x, 0.5, bs=bs, bc=bc), iters=5)
@@ -55,18 +85,22 @@ def run(budget=None, quick=True) -> list[dict]:
     zf = 1 - float(np.mean(np.asarray(bm)))
     saved = zf * M * K * 2                                  # bf16 bytes saved
     rows.append({"name": "kernel/zebra_mask", "us_per_call": t_ker,
-                 "ref_us": round(t_ref, 1), "zero_frac": round(zf, 3),
+                 "ref_us": round(t_ref, 1),
+                 "speedup_vs_ref": round(t_ref / t_ker, 2),
+                 "zero_frac": round(zf, 3),
                  "hbm_bytes_saved_per_call": int(saved),
                  "index_bytes": (M // bs) * (K // bc)})
 
-    t_spmm = timeit(lambda: zebra_spmm_op(x, w, bm, bs=bs, bc=bc), iters=3)
+    t_spmm = timeit(lambda: zebra_spmm_op(x, w, bm, bs=bs, bc=bc), iters=5)
     t_dense = timeit(lambda: (x @ w), iters=20)
     rows.append({"name": "kernel/zebra_spmm", "us_per_call": t_spmm,
                  "dense_matmul_us": round(t_dense, 1),
+                 "speedup_vs_ref": round(t_dense / t_spmm, 2),
+                 "supertile": [stm, stk, bn],
                  "mxu_blocks_skipped_frac": round(zf, 3),
                  "flops_skipped": int(zf * 2 * M * K * N)})
 
-    # ---- fused vs composed: the single-pass streaming engine -------------
+    # ---- fused vs composed: the two-phase supertiled streaming engine ----
     payload_f, bm_f, n_live = zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)
     payload_c, n_live_c = zebra_pack_op(y, bm, bs=bs, bc=bc)
     np.testing.assert_array_equal(np.asarray(payload_f), np.asarray(payload_c))
@@ -80,9 +114,9 @@ def run(budget=None, quick=True) -> list[dict]:
         lambda: zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)[0],
         lambda: zebra_pack_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
                               bm, bs=bs, bc=bc)[0],
-        {"launches": 1, "dense_map_hbm_crossings": 1,
-         "dense_bytes_crossed": dense_b, "stream_bytes": stream_b},
-        {"launches": 2, "dense_map_hbm_crossings": 3,
+        {"dense_map_hbm_crossings": 2,
+         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b},
+        {"dense_map_hbm_crossings": 3,
          "dense_bytes_crossed": 3 * dense_b, "stream_bytes": stream_b})
 
     y_stream_f = zebra_unpack_op(payload_f, bm_f, bs=bs, bc=bc)
@@ -94,9 +128,9 @@ def run(budget=None, quick=True) -> list[dict]:
         lambda: zebra_unpack_op(
             zebra_pack_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
                           bm, bs=bs, bc=bc)[0], bm, bs=bs, bc=bc),
-        {"launches": 2, "dense_map_hbm_crossings": 2,
-         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b},
-        {"launches": 3, "dense_map_hbm_crossings": 4,
+        {"dense_map_hbm_crossings": 3,
+         "dense_bytes_crossed": 3 * dense_b, "stream_bytes": stream_b},
+        {"dense_map_hbm_crossings": 4,
          "dense_bytes_crossed": 4 * dense_b, "stream_bytes": stream_b})
 
     y_cs = zebra_spmm_cs_op(payload_f, w, bm_f, bs=bs, bc=bc)
@@ -108,10 +142,10 @@ def run(budget=None, quick=True) -> list[dict]:
                                  w, bm_f, bs=bs, bc=bc),
         lambda: zebra_spmm_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
                               w, bm, bs=bs, bc=bc),
-        {"launches": 2, "dense_map_hbm_crossings": 1,
-         "dense_bytes_crossed": dense_b, "stream_bytes": stream_b},
-        {"launches": 2, "dense_map_hbm_crossings": 2,
-         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b})
+        {"dense_map_hbm_crossings": 2, "supertile": [stm, stk, bn],
+         "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b},
+        {"dense_map_hbm_crossings": 3, "supertile": [stm, stk, bn],
+         "dense_bytes_crossed": 3 * dense_b, "stream_bytes": stream_b})
 
     emit(rows, "kernels")
     return rows

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: fail CI when a fresh benchmark run drifts from
+the committed BENCH_*.json baselines.
+
+Two classes of check, per row matched by ``name`` across baseline and
+fresh (the intersection must be non-empty per file):
+
+* **exact**: byte-accounting columns (``stream_bytes``,
+  ``measured_bytes``, ``dense_bytes``, ``index_bytes``) must match the
+  baseline bit for bit — the compressed stream length is a correctness
+  observable (paper Eq. 2/3), not a performance number, so ANY drift is
+  a bug, not noise.
+* **bounded**: ``us_per_call`` may regress to at most
+  ``tol * baseline + slack`` (defaults 3.0x + 5000 us — generous,
+  because CI containers share cores and sub-millisecond interpret-mode
+  rows swing 2-3x run to run on a loaded machine; the absolute slack
+  keeps micro-rows from flapping while still catching the
+  order-of-magnitude regressions this gate exists for). Rows faster
+  than 50 us are exempt entirely (pure-overhead rows where scheduler
+  jitter exceeds the signal).
+
+Usage:
+    python scripts/bench_gate.py --baseline DIR --fresh DIR \
+        [--tol 3.0] [--slack-us 5000]
+
+Exit 0 = gate green; exit 1 = drift/regression with a per-row report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json")
+EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes")
+US_EXEMPT_BELOW = 50.0
+
+
+def _rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def gate_file(base_path: str, fresh_path: str, tol: float,
+              slack_us: float) -> list[str]:
+    errors = []
+    base = _rows(base_path)
+    fresh = _rows(fresh_path)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        return [f"{os.path.basename(fresh_path)}: no row names shared with "
+                f"the baseline — the bench was renamed without regenerating "
+                f"the committed baseline"]
+    for name in shared:
+        b, f = base[name], fresh[name]
+        for key in EXACT_KEYS:
+            if key in b and key in f and b[key] != f[key]:
+                errors.append(
+                    f"{name}: {key} drifted {b[key]} -> {f[key]} (byte "
+                    f"accounting is exact — this is a stream-format bug, "
+                    f"not noise)")
+        bus, fus = b.get("us_per_call", 0.0), f.get("us_per_call", 0.0)
+        if bus >= US_EXEMPT_BELOW and fus > tol * bus + slack_us:
+            errors.append(
+                f"{name}: us_per_call regressed {bus:.1f} -> {fus:.1f} "
+                f"(> {tol:g}x + {slack_us:g} us tolerance)")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the freshly emitted BENCH_*.json")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOL", 3.0)),
+                    help="us_per_call regression tolerance factor")
+    ap.add_argument("--slack-us", type=float,
+                    default=float(os.environ.get("BENCH_GATE_SLACK_US", 5000)),
+                    help="absolute us_per_call slack on top of --tol")
+    args = ap.parse_args()
+
+    all_errors = []
+    checked = 0
+    for fname in FILES:
+        base_path = os.path.join(args.baseline, fname)
+        fresh_path = os.path.join(args.fresh, fname)
+        try:
+            _rows(base_path)
+        except (FileNotFoundError, json.JSONDecodeError, KeyError):
+            # missing, empty (e.g. a failed `git show` left a truncated
+            # file) or schema-less baseline: nothing to gate against yet
+            print(f"bench_gate: no usable baseline {base_path} — skipping "
+                  f"(first run seeds it)")
+            continue
+        if not os.path.exists(fresh_path):
+            all_errors.append(f"{fname}: fresh artifact missing at "
+                              f"{fresh_path} (bench did not run?)")
+            continue
+        errs = gate_file(base_path, fresh_path, args.tol, args.slack_us)
+        n = len(_rows(fresh_path))
+        checked += 1
+        status = "FAIL" if errs else "ok"
+        print(f"bench_gate: {fname}: {n} fresh rows vs baseline -> {status}")
+        all_errors.extend(errs)
+
+    if all_errors:
+        print("\nbench_gate FAILED:", file=sys.stderr)
+        for e in all_errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    if not checked:
+        print("bench_gate: nothing to check (no baselines found)")
+    else:
+        print("bench_gate OK: byte accounting exact, us_per_call within "
+              f"{args.tol:g}x + {args.slack_us:g} us")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,22 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Stash the COMMITTED BENCH_*.json as the perf-gate baseline (scripts/
+# bench_gate.py compares at the end). Taken from git HEAD, not the working
+# tree: repeated local runs must keep comparing against the committed
+# trajectory, not ratchet against their own previous output. Falls back to
+# the working-tree copy outside a git checkout.
+mkdir -p .bench-baseline
+for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json; do
+    if ! git show "HEAD:$f" > ".bench-baseline/$f" 2>/dev/null; then
+        # a failed `git show` leaves a truncated file — replace it with
+        # the working-tree copy, or remove it so the gate's first-run
+        # skip path engages instead of choking on empty JSON
+        cp "$f" ".bench-baseline/$f" 2>/dev/null \
+            || rm -f ".bench-baseline/$f"
+    fi
+done
+
 echo "== tier-1 (hypothesis-optional shim path) =="
 python -m pytest -x -q
 
@@ -65,4 +81,8 @@ for model in ("cnn", "lm"):
 print(f"  BENCH_train.json: {len(trows)} train-smoke rows OK "
       f"(reference+pallas, CNN+LM)")
 EOF
+
+echo "== perf-trajectory gate (stream_bytes exact, us_per_call bounded) =="
+python scripts/bench_gate.py --baseline .bench-baseline --fresh .
+
 echo "CI OK"

@@ -149,9 +149,10 @@ def decompress(cm: CompressedMap, *, use_kernel: bool = True,
 
 def compress_masked(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
                     interpret: bool = True) -> CompressedMap:
-    """Single-pass lossy codec entry: raw (..., K) map -> Zebra-thresholded
-    CompressedMap in ONE producer launch (``zebra_mask_pack``) — the dense
-    masked map is never materialized on the way into the stream."""
+    """Streaming lossy codec entry: raw (..., K) map -> Zebra-thresholded
+    CompressedMap via the two-phase parallel producer (``zebra_mask_pack``)
+    — the dense masked map is never materialized on the way into the
+    stream."""
     shape = tuple(x.shape)
     x2 = x.reshape(-1, shape[-1])
     M, K = x2.shape
@@ -163,9 +164,9 @@ def compress_masked(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
 
 def transport_tokens(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """The full inference-site round trip in single-pass streaming form:
-    ``zebra_mask_pack`` -> ``zebra_unpack`` — TWO launches, only the
-    (payload, bitmap) stream between them. Returns (masked map, keep
+    """The full inference-site round trip in streaming form:
+    ``zebra_mask_pack`` -> ``zebra_unpack`` — only the (payload, bitmap)
+    stream between producer and expander. Returns (masked map, keep
     bitmap). Numerically identical to masking alone — but it
     *materializes* the compressed stream, so the serve path observably
     moves compressed bytes when use_kernel is on."""

@@ -24,9 +24,14 @@ Capabilities:
     The backend may take the downstream weight ``w`` and return the
     product instead of the masked map.
 ``vmem_bounded``
-    The single-pass producer must hold the worst-case payload
-    VMEM-resident; the engine gates it on ``ZebraConfig.
-    vmem_budget_bytes`` and falls back to the tiled pipeline beyond it.
+    The backend's whole-map working set must fit ``ZebraConfig.
+    vmem_budget_bytes``; the engine degrades bigger maps to reference
+    with reason ``"vmem-bounded"`` (as it once gated the old
+    whole-payload-resident producer). The built-in compressed backends
+    now self-tile — the two-phase producer's comparator pass and the
+    supertiled consumers size their windows from ``ZebraConfig.
+    tiles_for`` under the budget — so they declare False; the flag
+    serves registered backends that cannot self-tile.
 ``grad_variant``
     Which ``kernels.grad`` forward variant implements this backend's
     trainable path (``"mask"`` | ``"stream"``; None = jnp autodiff).
@@ -92,7 +97,7 @@ register_backend(BackendSpec(
     vmem_bounded=False, grad_variant="mask"))
 register_backend(BackendSpec(
     "stream", trainable=True, emits_stream=True, consumes_w=False,
-    vmem_bounded=True, grad_variant="stream"))
+    vmem_bounded=False, grad_variant="stream"))
 register_backend(BackendSpec(
     "fused", trainable=False, emits_stream=True, consumes_w=True,
-    vmem_bounded=True))
+    vmem_bounded=False))

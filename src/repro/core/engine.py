@@ -20,22 +20,27 @@ overrides via ``ZebraConfig.site_backends``):
     launch is wrapped in ``jax.custom_vjp`` (``kernels.grad``) whose
     backward implements the hard/STE/soft gradient modes.
 ``stream``
-    ``zebra_mask_pack`` -> ``zebra_unpack``: TWO launches, with only the
-    compressed ``(payload, bitmap)`` stream between them — the dense
-    masked map is never materialized by the producer.
+    ``zebra_mask_pack`` -> ``zebra_unpack``: the two-phase parallel
+    producer (supertiled comparator pass + XLA exclusive scan +
+    parallel pack pass) hands only the compressed ``(payload, bitmap)``
+    stream to the expander — the dense masked map is never materialized
+    by the producer, and no map is too big (the comparator pass tiles
+    under ``tiles_for``; there is no whole-payload VMEM residency).
     ``SiteAux.measured_bytes`` reports the observed stream length
     (payload + packed index, the Eq. 2/3 observable). Numerically
     identical to reference — and trainable through the same custom_vjp,
     so the bytes observable stays live during training.
 ``fused``
-    ``zebra_mask_pack`` -> ``zebra_spmm_cs``: TWO launches; the
-    downstream matmul reads live blocks straight from the compressed
-    payload via the bitmap's prefix-sum slot map and *skips* dead
-    K-blocks without ever unpacking (dynamic feature-map pruning, Liang
-    et al. 2018 style). Needs the downstream weight ``w``; used by the
-    dense FFN ``w_down``. Byte accounting is the same ``stream_bytes``
-    helper as stream. Infer-only (the payload-consuming GEMM has no
-    backward rule) — train-mode requests degrade to reference.
+    ``zebra_mask_pack`` -> ``zebra_spmm_cs``: the downstream matmul
+    reads live blocks straight from the compressed payload via the
+    bitmap's prefix-sum slot map in ``(stm, stk)`` supertile steps
+    (``tiles_for(kind="gemm")``) and *skips* dead K-blocks in
+    whole-supertile chunks without ever unpacking (dynamic feature-map
+    pruning, Liang et al. 2018 style). Needs the downstream weight
+    ``w``; used by the dense FFN ``w_down``. Byte accounting is the
+    same ``stream_bytes`` helper as stream. Infer-only (the
+    payload-consuming GEMM has no backward rule) — train-mode requests
+    degrade to reference.
 
 Capability resolution. Which backend actually executes is decided by the
 :mod:`core.backends` registry: each :class:`~repro.core.backends.
@@ -55,6 +60,10 @@ implicit rewrites. The current reasons:
                      (e.g. single-token decode) degrade to ``bs=1`` — a
                      one-row "block" has no skippable HBM tile, so
                      kernel dispatch would be pure overhead.
+``vmem-bounded``     a backend declaring ``vmem_bounded`` asked to run a
+                     map bigger than ``vmem_budget_bytes``. The built-in
+                     compressed backends self-tile (declare False); the
+                     reason exists for registered backends that cannot.
 
 Layouts. ``tokens`` maps ``(..., S, D)`` tile into ``(block_seq,
 block_ch)`` VMEM blocks. ``nchw`` maps ``(B, C, H, W)`` use the paper's
@@ -293,25 +302,26 @@ def stream_bytes(n_live: jax.Array, bs: int, bc: int, dtype,
 # Backend implementations — each maps (x2 (M, K), bs, bc, cfg) -> (y2, aux)
 # ---------------------------------------------------------------------------
 
-def _producer_fits_vmem(x2: jax.Array, cfg: ZebraConfig) -> bool:
-    """zebra_mask_pack keeps the whole worst-case payload (== the map
-    size) VMEM-resident across its grid; maps beyond the budget take the
-    tiled multi-launch pipeline instead."""
-    return x2.size * jnp.dtype(x2.dtype).itemsize <= cfg.vmem_budget_bytes
-
-
 def _kernel_statics(variant: str, x2: jax.Array, bs: int, bc: int,
                     cfg: ZebraConfig):
     """Static launch config for ``kernels.grad.launch_forward`` — the ONE
     forward pipeline shared by infer dispatch and the custom_vjp train
-    path, so the two cannot drift apart."""
+    path, so the two cannot drift apart. The two-phase producer tiles
+    its comparator pass with the same ``tiles_for`` supertile as the
+    mask variant, so no map is ever over budget (the old
+    whole-payload-resident producer needed a fits-VMEM degrade here)."""
+    from ..kernels import supertile as st
     from ..kernels.grad import KernelStatics
     M, K = x2.shape
+    item = jnp.dtype(x2.dtype).itemsize
     tm, tk = cfg.tiles_for(M, K, bs, bc, x2.dtype)
+    gtm, gtk = cfg.tiles_for(M, K, bs, bc, x2.dtype, kind="gather")
+    pw = st.pack_window((M // bs) * (K // bc), bs, bc, item,
+                        int(cfg.vmem_budget_bytes))
     return KernelStatics(variant=variant, t_obj=cfg.t_obj, bs=bs, bc=bc,
-                         tm=tm, tk=tk, grad_mode=cfg.grad_mode,
-                         soft_temp=cfg.soft_temp, interpret=cfg.interpret,
-                         fits_vmem=_producer_fits_vmem(x2, cfg))
+                         tm=tm, tk=tk, gtm=gtm, gtk=gtk, pw=pw,
+                         grad_mode=cfg.grad_mode,
+                         soft_temp=cfg.soft_temp, interpret=cfg.interpret)
 
 
 def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
@@ -321,18 +331,25 @@ def _run_pallas(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
 
 
 def _mask_pack(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
-    """Single-pass producer: one launch, compressed stream out, the dense
-    masked map never materialized."""
+    """Two-phase parallel producer: compressed stream out, the dense
+    masked map never materialized; comparator pass tiled by tiles_for,
+    pack pass windowed under the same budget."""
+    from ..kernels import supertile as st
     from ..kernels.mask_pack import zebra_mask_pack
-    return zebra_mask_pack(x2, t_obj=cfg.t_obj, bs=bs, bc=bc,
-                           interpret=cfg.interpret)
+    M, K = x2.shape
+    tm, tk = cfg.tiles_for(M, K, bs, bc, x2.dtype)
+    window = st.pack_window((M // bs) * (K // bc), bs, bc,
+                            jnp.dtype(x2.dtype).itemsize,
+                            int(cfg.vmem_budget_bytes))
+    return zebra_mask_pack(x2, t_obj=cfg.t_obj, bs=bs, bc=bc, tm=tm, tk=tk,
+                           window=window, interpret=cfg.interpret)
 
 
 def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
-    """mask_pack -> unpack: 2 launches, (payload, bitmap) in between.
-    Over-budget maps degrade to the tiled mask -> pack -> unpack pipeline
-    (3 launches, comparator tiles from cfg.tiles_for) — same stream, same
-    byte accounting, the producer just can't hold the payload in VMEM."""
+    """mask_pack -> unpack with only the (payload, bitmap) stream between
+    producer and expander. Any map size fits: the producer's comparator
+    pass tiles under cfg.tiles_for, the pack pass touches one payload
+    slot window per step (no whole-payload VMEM residency)."""
     from ..kernels.grad import launch_forward
     y2, bitmap, n_live = launch_forward(
         x2, _kernel_statics("stream", x2, bs, bc, cfg))
@@ -341,21 +358,18 @@ def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
 
 def _run_fused(x2: jax.Array, w: jax.Array, bs: int, bc: int,
                cfg: ZebraConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """mask_pack -> payload-consuming GEMM: 2 launches, the GEMM reads live
-    blocks straight from the compressed payload (dead K-blocks skipped,
-    never unpacked). Over-budget maps degrade to tiled mask -> zebra_spmm
-    (n_live then comes from the bitmap; same stream_bytes rule).
+    """mask_pack -> supertiled payload-consuming GEMM: the GEMM reads live
+    blocks from the compressed payload in (stm, stk) supertile steps
+    sized by cfg.tiles_for(kind="gemm") — dead K-blocks are skipped in
+    whole-supertile chunks, the dense map is never unpacked.
     Returns (x' @ w, bitmap, fetched bytes)."""
-    if _producer_fits_vmem(x2, cfg):
-        from ..kernels.spmm_cs import zebra_spmm_cs
-        payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
-        out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc,
-                            interpret=cfg.interpret)
-    else:
-        from ..kernels.zebra_spmm import zebra_spmm
-        y2, bitmap, _ = _run_pallas(x2, bs, bc, cfg)
-        out = zebra_spmm(y2, w, bitmap, bs=bs, bc=bc, interpret=cfg.interpret)
-        n_live = jnp.sum(bitmap.astype(jnp.int32))
+    from ..kernels.spmm_cs import zebra_spmm_cs
+    M, K = x2.shape
+    payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
+    stm, stk, bn = cfg.tiles_for(M, K, bs, bc, x2.dtype, kind="gemm",
+                                 n=w.shape[-1])
+    out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, bn=bn,
+                        stm=stm, stk=stk, interpret=cfg.interpret)
     measured = stream_bytes(n_live, bs, bc, x2.dtype, bitmap.size)
     return out.astype(x2.dtype), bitmap, measured
 
@@ -420,12 +434,16 @@ def register_engine_backend(spec: BackendSpec, infer_impl: Callable,
 # ---------------------------------------------------------------------------
 
 def _resolve_backend(spec: BackendSpec, *, mode: str, tnet,
-                     degenerate: bool) -> tuple[str, str | None]:
+                     degenerate: bool, over_budget: bool = False
+                     ) -> tuple[str, str | None]:
     """Map one site's situation onto a backend the spec can serve.
 
     Returns ``(final backend name, degrade reason | None)`` — the single
     place train/infer/shape legality is decided (no implicit rules at
-    call sites)."""
+    call sites). ``over_budget`` only matters for backends declaring
+    ``vmem_bounded``: their whole-map working set must fit
+    ``vmem_budget_bytes`` (the built-in compressed backends self-tile
+    and declare False, so they never degrade here)."""
     if spec.name == "reference":
         return "reference", None
     if mode == "train" and not spec.trainable:
@@ -435,6 +453,8 @@ def _resolve_backend(spec: BackendSpec, *, mode: str, tnet,
                                         # Eq. 1 threshold gradient are jnp-only
     if degenerate:
         return "reference", "degenerate-rows"
+    if spec.vmem_bounded and over_budget:
+        return "reference", "vmem-bounded"
     return spec.name, None
 
 
@@ -521,8 +541,12 @@ def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
     else:
         raise ValueError(f"unknown layout {layout!r}")
 
+    over_budget = (spec.vmem_bounded and
+                   dims[0] * dims[1] * jnp.dtype(x.dtype).itemsize
+                   > cfg.vmem_budget_bytes)
     backend, reason = _resolve_backend(spec, mode=cfg.mode, tnet=tnet,
-                                       degenerate=degenerate)
+                                       degenerate=degenerate,
+                                       over_budget=over_budget)
     if reason is not None:
         _log_degrade(site, spec.name, reason)
     label = backend if reason is None else f"{backend}({reason})"

@@ -62,7 +62,8 @@ class ZebraConfig:
     vmem_budget_bytes: int = 8 * 1024 * 1024
                                  # per-launch VMEM working-set cap the tile
                                  # chooser (tiles_for) sizes comparator
-                                 # tiles against (~half a 16 MB core)
+                                 # tiles AND GEMM/gather supertiles against
+                                 # (~half a 16 MB core)
 
     def __post_init__(self):
         # config-time validation against the capability registry — a typo'd
@@ -81,23 +82,45 @@ class ZebraConfig:
         """Resolve the execution backend for one named site."""
         return dict(self.site_backends).get(site, self.backend) or "reference"
 
-    def tiles_for(self, M: int, K: int, bs: int, bc: int, dtype) -> tuple[int, int]:
-        """VMEM-budget/dtype-aware comparator tile (tm, tk) for an (M, K)
-        map with (bs, bc) Zebra blocks.
+    def tiles_for(self, M: int, K: int, bs: int, bc: int, dtype, *,
+                  kind: str = "comparator", n: int | None = None):
+        """VMEM-budget/dtype-aware supertile chooser for an (M, K) map
+        with (bs, bc) Zebra blocks — the ONE tiling policy every kernel
+        launch goes through, so producers and consumers cannot disagree.
 
-        The comparator holds an input tile and an output tile in VMEM
-        (2 * tm * tk * itemsize bytes; the bitmap tile is negligible), so
-        the chooser takes the widest block-aligned tk that leaves at least
-        one block row within ``vmem_budget_bytes``, then the tallest
-        block-aligned tm that fits — bf16 maps get twice the f32 tile.
-        Never shrinks below one (bs, bc) block; XLA pads sub-tile maps.
+        ``kind="comparator"`` (default): tile (tm, tk) for the bitmap /
+        masking passes. The pass holds an input tile and an output tile
+        in VMEM (2 * tm * tk * itemsize bytes; the bitmap tile is
+        negligible), so the chooser takes the widest block-aligned tk
+        that leaves at least one block row within ``vmem_budget_bytes``,
+        then the tallest block-aligned tm that fits — bf16 maps get
+        twice the f32 tile. Never shrinks below one (bs, bc) block; XLA
+        pads sub-tile maps.
+
+        ``kind="gemm"``: GEMM supertile (stm, stk, bn) for the
+        block-skipping consumers (``zebra_spmm`` / ``zebra_spmm_cs``)
+        against a (K, ``n``) weight — block-count divisors of the map
+        sides (no ragged payload windows) capped per step, accounting
+        for the activation windows, the (stk, bn) weight window and the
+        fp32 accumulator/output under the same budget.
+
+        ``kind="gather"``: supertile (stm, stk) for the payload
+        expander (``zebra_unpack``).
         """
+        from ..kernels import supertile as st
         item = jnp.dtype(dtype).itemsize
-        budget = max(int(self.vmem_budget_bytes), 2 * bs * bc * item)
-        tk = min(K, (budget // (2 * bs * item) // bc) * bc)
-        tk = max(tk, bc)
-        tm = min(M, (budget // (2 * tk * item) // bs) * bs)
-        return max(tm, bs), tk
+        if kind == "gemm":
+            if n is None:
+                raise ValueError("kind='gemm' needs the weight width n")
+            return st.gemm_supertiles(M, K, n, bs, bc, item,
+                                      int(self.vmem_budget_bytes))
+        if kind == "gather":
+            return st.gather_supertiles(M, K, bs, bc, item,
+                                        int(self.vmem_budget_bytes))
+        if kind != "comparator":
+            raise ValueError(f"unknown tile kind {kind!r}")
+        return st.comparator_tiles(M, K, bs, bc, item,
+                                   int(self.vmem_budget_bytes))
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spot: the Zebra
-comparator (zebra_mask), the block-skipping GEMM (zebra_spmm), the
-compressed-transport pack/unpack pair (zebra_pack / zebra_unpack), and
-the single-pass streaming pair (zebra_mask_pack / zebra_spmm_cs) that
-produces and consumes the (payload, bitmap) stream without ever
-materializing the dense masked map."""
+comparator (zebra_mask), the supertiled block-skipping GEMM
+(zebra_spmm), the compressed-transport pack/unpack pair (zebra_pack /
+zebra_unpack), and the two-phase streaming pair (zebra_mask_pack /
+zebra_spmm_cs) that produces and consumes the (payload, bitmap) stream
+without ever materializing the dense masked map. Supertile shapes come
+from kernels.supertile (via ZebraConfig.tiles_for) — one tiling policy
+for every launch."""
 from .ops import (zebra_mask_op, zebra_spmm_op, zebra_ffn_hidden,  # noqa: F401
                   zebra_mask_pack_op, zebra_spmm_cs_op,
                   zebra_pack_op, zebra_unpack_op)

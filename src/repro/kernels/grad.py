@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from .mask_pack import zebra_mask_pack
-from .pack import zebra_pack, zebra_unpack
+from .pack import zebra_unpack
 from .zebra_mask import zebra_mask
 
 
@@ -44,9 +44,14 @@ class KernelStatics(NamedTuple):
     """Hashable static config for one trainable kernel launch.
 
     ``variant`` picks the forward: ``"mask"`` (one comparator launch,
-    dense masked map out) or ``"stream"`` (mask_pack -> unpack, only the
-    compressed stream between launches; ``fits_vmem`` False degrades to
-    the tiled 3-launch pipeline exactly like the infer path).
+    dense masked map out) or ``"stream"`` (the two-phase parallel
+    ``zebra_mask_pack`` producer -> ``zebra_unpack``, only the
+    compressed stream in between). ``(tm, tk)`` is the comparator
+    supertile and ``(gtm, gtk)`` the expander's gather supertile, both
+    from ``ZebraConfig.tiles_for`` — every pass tiles under the config
+    budget, so no map is ever too big for the producer (the old
+    whole-payload-resident design needed a ``fits_vmem`` degrade; the
+    two-phase producer does not).
     """
     variant: str
     t_obj: float
@@ -54,10 +59,12 @@ class KernelStatics(NamedTuple):
     bc: int
     tm: int
     tk: int
+    gtm: int
+    gtk: int
+    pw: int                     # pack-pass slot window (budget-capped)
     grad_mode: str
     soft_temp: float
     interpret: bool
-    fits_vmem: bool
 
 
 def _expand2d(blocks: jax.Array, bs: int, bc: int) -> jax.Array:
@@ -72,16 +79,11 @@ def _mask_forward(x2: jax.Array, s: KernelStatics):
 
 
 def _stream_forward(x2: jax.Array, s: KernelStatics):
-    if s.fits_vmem:
-        payload, bitmap, n_live = zebra_mask_pack(
-            x2, t_obj=s.t_obj, bs=s.bs, bc=s.bc, interpret=s.interpret)
-    else:
-        y2, bitmap = zebra_mask(x2, t_obj=s.t_obj, bs=s.bs, bc=s.bc,
-                                tm=s.tm, tk=s.tk, interpret=s.interpret)
-        payload, n_live = zebra_pack(y2, bitmap, bs=s.bs, bc=s.bc,
-                                     interpret=s.interpret)
-    y2 = zebra_unpack(payload, bitmap, bs=s.bs, bc=s.bc,
-                      interpret=s.interpret)
+    payload, bitmap, n_live = zebra_mask_pack(
+        x2, t_obj=s.t_obj, bs=s.bs, bc=s.bc, tm=s.tm, tk=s.tk,
+        window=s.pw, interpret=s.interpret)
+    y2 = zebra_unpack(payload, bitmap, bs=s.bs, bc=s.bc, stm=s.gtm,
+                      stk=s.gtk, interpret=s.interpret)
     return y2, bitmap, n_live
 
 

@@ -1,32 +1,55 @@
-"""Pallas TPU kernel: single-pass Zebra streaming producer.
+"""Pallas TPU kernels: two-phase parallel Zebra streaming producer.
 
-``zebra_mask_pack`` fuses the comparator (``zebra_mask``) and the payload
-compaction (``zebra_pack``) into ONE grid pass over the activation map:
-each ``(bs, bc)`` block is loaded into VMEM exactly once, its max is
-compared against ``t_obj``, and — if it survives — the block is written
-straight into the next payload slot. The dense masked map is *never
-materialized*: the only things that leave the kernel are the compressed
-``(payload, bitmap, n_live)`` stream, which is exactly what the paper's
-accelerator puts on DRAM (Eq. 2/3).
+``zebra_mask_pack`` turns a raw ``(M, K)`` activation map into the
+compressed ``(payload, bitmap, n_live)`` stream — the exact bytes the
+paper's accelerator puts on DRAM (Eq. 2/3) — without ever materializing
+the dense masked map, in **two fully parallel Pallas passes** bridged by
+a tiny XLA exclusive scan:
 
-Compaction uses an *online* exclusive prefix sum: the TPU grid is
-sequential (row-major, last axis fastest — the same row-major block order
-as ``zebra_pack``'s scatter), so a running counter in SMEM scratch is at
-every step equal to the exclusive prefix sum of the keep flags that
-``pack.py`` scalar-prefetches — without needing the bitmap before launch,
-which is what makes the pass single. Dead blocks write nothing; the
-payload tail past ``n_live`` is zeroed up front, so the stream is
-deterministic and bitwise-identical to ``zebra_pack(zebra_mask(x))``
-(live blocks are untouched by masking, so packing *raw* live blocks is
-already packing masked ones).
+1. **Comparator pass** (grid over ``tiles_for`` supertiles): each step
+   loads its own ``(tm, tk)`` tile, computes per-``(bs, bc)``-block
+   maxima and emits the keep bitmap for its tile. Nothing else leaves
+   the pass; steps share no state and can run in any order.
+2. **Exclusive scan** (XLA, not a launch): one ``cumsum`` over the keep
+   flags is simultaneously the per-supertile live counts (its blocked
+   segment sums), the per-supertile payload offsets (its values at
+   segment starts) and every block's slot index ``dmap[g]``; a scatter
+   of ``g`` into ``dmap[g]`` inverts it into ``src[slot] -> block``.
+3. **Pack pass** (grid over payload slot windows): each step *gathers*
+   the ``W`` source blocks for its own window of payload slots through
+   ``W`` independently-addressed BlockSpecs (``src`` rides in
+   scalar-prefetch SMEM) and zeroes the tail past ``n_live``. Every
+   step writes only its own ``(W, bs, bc)`` slot range.
 
-The payload output block is the whole ``(n_blocks, bs, bc)`` buffer with a
-constant index map — it stays resident for the entire grid (written back
-to HBM once at the end), so the map's worst-case payload must fit in
-VMEM. The engine gates dispatch on ``ZebraConfig.vmem_budget_bytes``
-(``core.engine._producer_fits_vmem``) and degrades over-budget maps to
-the tiled multi-launch pipeline whose comparator tiles come from
-``ZebraConfig.tiles_for``.
+Like the consumers, the pack pass has two executable realizations of the
+one contract, selected by ``gather_kernel`` (default: the Pallas form
+when ``interpret=False``): on CPU containers the identical gather runs
+as one XLA blocked take (``xb[src]``) instead, because the Pallas
+interpreter charges ~100 us per dynamically-indexed window fetch and
+duplicates the ``W`` source operands in its grid carry — the XLA take is
+the faster realization of the same dataflow, bit for bit.
+
+Why two-phase beats the online counter: the single-pass design kept a
+running SMEM counter as an *online* exclusive prefix sum, which (a)
+serialized the whole grid — every step observed the counter state of
+all previous steps, so nothing could overlap — and (b) forced the
+entire worst-case ``(n_blocks, bs, bc)`` payload to stay VMEM-resident
+across the grid (the only way a sequential step could store to slot
+``counter``), capping map size at ``vmem_budget_bytes`` and degrading
+larger maps to a 3-launch pipeline. Hoisting the prefix sum out of the
+kernel into one XLA cumsum removes both: the comparator and pack passes
+touch only their own tiles (no cross-step ordering dependence, no
+whole-payload residency, any map size), at the cost of reading ``x``
+twice — cheap, because the second read is exactly as parallel as the
+first. The scatter "write each supertile's live blocks to its slot
+range" is realized as the equivalent aligned *gather* (each slot window
+pulls its source blocks via the inverted slot map), because Pallas
+output windows are shape-aligned while live-run offsets are not.
+
+Still ≤ 2 launches; the stream is bitwise-identical to
+``zebra_pack(*zebra_mask(x))`` (live blocks are untouched by masking,
+so packing *raw* live blocks is already packing masked ones, and the
+zero tail is written explicitly).
 """
 from __future__ import annotations
 
@@ -37,61 +60,112 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _mask_pack_kernel(x_ref, p_ref, bm_ref, nl_ref, count_ref, *,
-                      t_obj: float):
-    i, j = pl.program_id(0), pl.program_id(1)
-
-    @pl.when((i == 0) & (j == 0))
-    def _init():
-        count_ref[0] = 0
-        p_ref[...] = jnp.zeros_like(p_ref)
-
-    blk = x_ref[...]                                       # (bs, bc)
-    live = jnp.max(jnp.abs(blk)) >= jnp.asarray(t_obj, blk.dtype)
-    bm_ref[0, 0] = live.astype(jnp.int8)
-    slot = count_ref[0]                  # == excl. prefix sum of keep flags
-
-    @pl.when(live)
-    def _write():
-        p_ref[pl.ds(slot, 1)] = blk[None]
-        count_ref[0] = slot + 1
-
-    nl_ref[0] = count_ref[0]
+from ..utils import cdiv
+from .supertile import comparator_tiles, pack_window
 
 
-@functools.partial(jax.jit, static_argnames=("t_obj", "bs", "bc", "interpret"))
+def _bitmap_kernel(x_ref, bm_ref, *, t_obj: float, bs: int, bc: int):
+    x = x_ref[...]
+    TM, TK = x.shape
+    xb = x.reshape(TM // bs, bs, TK // bc, bc)
+    blockmax = jnp.max(jnp.abs(xb), axis=(1, 3))                  # (tm, tk)
+    bm_ref[...] = (blockmax >= jnp.asarray(t_obj, blockmax.dtype)
+                   ).astype(jnp.int8)
+
+
+def _gather_pack_kernel(src_ref, nl_ref, *refs, window: int):
+    del src_ref                          # consumed by the BlockSpec index maps
+    x_refs, out_ref = refs[:window], refs[window]
+    s = pl.program_id(0)
+    n_live = nl_ref[0]
+    parts = []
+    for w in range(window):
+        blk = x_refs[w][...]                                      # (bs, bc)
+        live = (s * window + w) < n_live
+        parts.append(jnp.where(live, blk, jnp.zeros_like(blk))[None])
+    out_ref[...] = parts[0] if window == 1 else jnp.concatenate(parts, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("t_obj", "bs", "bc", "tm", "tk",
+                                             "window", "gather_kernel",
+                                             "interpret"))
 def zebra_mask_pack(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
-                    interpret: bool = True
+                    tm: int | None = None, tk: int | None = None,
+                    window: int | None = None,
+                    gather_kernel: bool | None = None, interpret: bool = True
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One-pass comparator + compaction over an (M, K) map.
+    """Two-phase comparator + compaction over an (M, K) map.
 
     Returns ``(payload (n_blocks, bs, bc) — live blocks first in row-major
     block order, zero tail; bitmap (M//bs, K//bc) int8; n_live () int32)``.
-    Bitwise-identical to ``zebra_pack(*zebra_mask(x))`` in one launch.
+    Bitwise-identical to ``zebra_pack(*zebra_mask(x))`` in ≤ 2 launches.
+
+    ``tm``/``tk`` size the comparator pass's supertile (defaults to the
+    module budget chooser); ``window`` is the pack pass's payload slots
+    per grid step (defaults to the largest divisor of the block count
+    under the cap).
     """
     M, K = x.shape
     if M % bs or K % bc:
         raise ValueError(f"(M={M}, K={K}) must divide by block ({bs},{bc})")
     nm, nk = M // bs, K // bc
     nb = nm * nk
-    payload, bitmap, n_live = pl.pallas_call(
-        functools.partial(_mask_pack_kernel, t_obj=t_obj),
-        grid=(nm, nk),
-        in_specs=[pl.BlockSpec((bs, bc), lambda i, j: (i, j))],
-        out_specs=[
-            # whole payload resident across the grid: constant index map,
-            # written back once; enables the in-kernel dynamic-slot store.
-            pl.BlockSpec((nb, bs, bc), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nb, bs, bc), x.dtype),
-            jax.ShapeDtypeStruct((nm, nk), jnp.int8),
-            jax.ShapeDtypeStruct((1,), jnp.int32),
-        ],
-        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    item = jnp.dtype(x.dtype).itemsize
+    # standalone calls take the default-budget choosers; the engine passes
+    # ZebraConfig-budgeted tiles and pack window explicitly (same formulas)
+    dtm, dtk = comparator_tiles(M, K, bs, bc, item)
+    tm, tk = tm or dtm, tk or dtk
+    if tm % bs or tk % bc:
+        raise ValueError(f"tile ({tm},{tk}) must divide by block ({bs},{bc})")
+    W = window or pack_window(nb, bs, bc, item)
+    if nb % W:
+        raise ValueError(f"pack window {W} must divide n_blocks {nb}")
+    if gather_kernel is None:
+        gather_kernel = not interpret
+
+    # -- phase 1: parallel comparator, bitmap only --------------------------
+    bitmap = pl.pallas_call(
+        functools.partial(_bitmap_kernel, t_obj=t_obj, bs=bs, bc=bc),
+        grid=(cdiv(M, tm), cdiv(K, tk)),
+        in_specs=[pl.BlockSpec((tm, tk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tm // bs, tk // bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nm, nk), jnp.int8),
         interpret=interpret,
     )(x)
-    return payload, bitmap, n_live[0]
+
+    # -- phase 2a: ONE exclusive scan = counts, offsets and slot map --------
+    keep = bitmap.reshape(-1).astype(jnp.int32)
+    dmap = jnp.cumsum(keep) - keep          # block -> payload slot
+    n_live = jnp.sum(keep).astype(jnp.int32)
+    g = jnp.arange(nb, dtype=jnp.int32)
+    # invert: src[slot] = block index of the slot's live block (0 for tail,
+    # which the pack kernel zeroes via slot >= n_live)
+    src = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(keep != 0, dmap, nb)].set(g, mode="drop")
+
+    # -- phase 2b: parallel gather-pack over payload slot windows -----------
+    if not gather_kernel:
+        # interpret form: the identical gather as one XLA blocked take
+        xb = (x.reshape(nm, bs, nk, bc).transpose(0, 2, 1, 3)
+              .reshape(nb, bs, bc))
+        payload = jnp.where((g < n_live)[:, None, None], xb[src],
+                            jnp.zeros((), x.dtype))
+        return payload, bitmap, n_live
+
+    def _src_idx(s, src, nl, *, w):
+        gidx = src[s * W + w]
+        return (gidx // nk, gidx % nk)
+
+    payload = pl.pallas_call(
+        functools.partial(_gather_pack_kernel, window=W),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nb // W,),
+            in_specs=[pl.BlockSpec((bs, bc), functools.partial(_src_idx, w=w))
+                      for w in range(W)],
+            out_specs=pl.BlockSpec((W, bs, bc), lambda s, src, nl: (s, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, bs, bc), x.dtype),
+        interpret=interpret,
+    )(src, n_live[None], *([x] * W))
+    return payload, bitmap, n_live

@@ -28,8 +28,10 @@ def zebra_mask_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
 
 
 def zebra_spmm_op(x: jax.Array, w: jax.Array, bitmap: jax.Array,
-                  bs: int = 8, bc: int = 128, interpret: bool = True):
-    return zebra_spmm(x, w, bitmap, bs=bs, bc=bc, interpret=interpret)
+                  bs: int = 8, bc: int = 128, stm: int | None = None,
+                  stk: int | None = None, interpret: bool = True):
+    return zebra_spmm(x, w, bitmap, bs=bs, bc=bc, stm=stm, stk=stk,
+                      interpret=interpret)
 
 
 def zebra_pack_op(x: jax.Array, bitmap: jax.Array, bs: int = 8, bc: int = 128,
@@ -44,24 +46,28 @@ def zebra_unpack_op(payload: jax.Array, bitmap: jax.Array, bs: int = 8,
 
 
 def zebra_mask_pack_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
+                       tm: int | None = None, tk: int | None = None,
                        interpret: bool = True):
-    """Single-pass producer: (M, K) -> (payload, bitmap, n_live)."""
-    return zebra_mask_pack(x, t_obj=t_obj, bs=bs, bc=bc, interpret=interpret)
+    """Two-phase parallel producer: (M, K) -> (payload, bitmap, n_live)."""
+    return zebra_mask_pack(x, t_obj=t_obj, bs=bs, bc=bc, tm=tm, tk=tk,
+                           interpret=interpret)
 
 
 def zebra_spmm_cs_op(payload: jax.Array, w: jax.Array, bitmap: jax.Array,
-                     bs: int = 8, bc: int = 128, interpret: bool = True):
+                     bs: int = 8, bc: int = 128, stm: int | None = None,
+                     stk: int | None = None, interpret: bool = True):
     """Compressed-stream consumer: payload x (K, N) -> (M, N) fp32."""
-    return zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, interpret=interpret)
+    return zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, stm=stm, stk=stk,
+                         interpret=interpret)
 
 
 def zebra_ffn_hidden(x: jax.Array, w_out: jax.Array, t_obj: float,
                      bs: int = 8, bc: int = 128, interpret: bool = True):
     """Fused: h' = zebra(h); y = h' @ W_out, skipping dead blocks.
 
-    Single-pass streaming form: mask_pack produces the compressed stream
-    (one launch, no dense masked intermediate) and the GEMM consumes the
-    payload directly (second launch)."""
+    Streaming form: the two-phase mask_pack producer emits the
+    compressed stream (no dense masked intermediate) and the supertiled
+    GEMM consumes the payload."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     payload, bm, _ = zebra_mask_pack(x2, t_obj=t_obj, bs=bs, bc=bc,

@@ -27,24 +27,53 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .supertile import gather_supertiles, validate_supertile
+
 
 def _pack_kernel(dmap_ref, keep_ref, x_ref, out_ref):
     del dmap_ref, keep_ref
     out_ref[...] = x_ref[...][None]
 
 
-def _unpack_kernel(smap_ref, keep_ref, p_ref, out_ref, *, nk: int):
-    del smap_ref
-    i, j = pl.program_id(0), pl.program_id(1)
-    live = keep_ref[i * nk + j] != 0
-    blk = p_ref[...][0]
-    out_ref[...] = jnp.where(live, blk, jnp.zeros_like(blk))
+def _unpack_kernel(smap_ref, keep_ref, *refs, R: int, C: int, bs: int,
+                   nk: int):
+    """Supertiled expander step: scatter the (stm, stk) supertile's R*C
+    dynamically slotted payload windows back to their dense positions,
+    zero-gating dead blocks (whose revolving-door windows alias live
+    slots)."""
+    del smap_ref                        # consumed by the BlockSpec index maps
+    p_refs, out_ref = refs[:R * C], refs[R * C]
+    i, kc = pl.program_id(0), pl.program_id(1)
+    rows = []
+    for r in range(R):
+        cols = []
+        for j in range(C):
+            live = keep_ref[(i * R + r) * nk + kc * C + j] != 0
+            blk = p_refs[r * C + j][...][0]
+            cols.append(jnp.where(live, blk, jnp.zeros_like(blk)))
+        rows.append(cols[0] if C == 1 else jnp.concatenate(cols, 1))
+    out_ref[...] = rows[0] if R == 1 else jnp.concatenate(rows, 0)
 
 
 def _prefix(bitmap: jax.Array) -> tuple[jax.Array, jax.Array]:
     """keep flags + exclusive prefix sum (the block -> payload-slot map)."""
     keep = bitmap.reshape(-1).astype(jnp.int32)
     return keep, (jnp.cumsum(keep) - keep).astype(jnp.int32)
+
+
+def expand_payload(payload: jax.Array, keep: jax.Array, smap: jax.Array,
+                   nm: int, nk: int, bs: int, bc: int) -> jax.Array:
+    """THE XLA blocked expansion of a compressed stream back to the dense
+    (M, K) map — shared by zebra_unpack's interpret form and
+    zebra_spmm_cs's interpret prologue, so the two cannot diverge.
+
+    jnp.where, not multiplication: a dead block's revolving-door slot
+    aliases a live block, and masking by * would leak NaN/Inf (and
+    -0.0) from it where the kernel form writes exact +0."""
+    blocks = jnp.where((keep != 0)[:, None, None], payload[smap],
+                       jnp.zeros((), payload.dtype))
+    return (blocks.reshape(nm, nk, bs, bc).transpose(0, 2, 1, 3)
+            .reshape(nm * bs, nk * bc))
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "bc", "interpret"))
@@ -86,28 +115,56 @@ def zebra_pack(x: jax.Array, bitmap: jax.Array, *, bs: int = 8, bc: int = 128,
     return payload, n_live.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "bc", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "stm", "stk",
+                                             "payload_windows", "interpret"))
 def zebra_unpack(payload: jax.Array, bitmap: jax.Array, *, bs: int = 8,
-                 bc: int = 128, interpret: bool = True) -> jax.Array:
-    """Inverse of zebra_pack: (n_blocks, bs, bc) payload -> dense (M, K)."""
+                 bc: int = 128, stm: int | None = None, stk: int | None = None,
+                 payload_windows: bool | None = None,
+                 interpret: bool = True) -> jax.Array:
+    """Inverse of zebra_pack: (n_blocks, bs, bc) payload -> dense (M, K).
+
+    Two executable realizations of the one contract (see mask_pack.py):
+    ``payload_windows=True`` is the TPU form — the grid steps over
+    ``(stm, stk)`` supertiles (``tiles_for(kind="gather")``; the engine
+    passes its budgeted tiles, standalone calls use the default-budget
+    chooser) and each step writes its own dense window from R*C
+    dynamically slotted payload windows. The interpret default runs the
+    identical expansion as one XLA blocked gather (the Pallas
+    interpreter charges ~100 us per dynamically-indexed window fetch,
+    so the gather is the faster realization of the same dataflow on
+    CPU, bit for bit)."""
     nm, nk = bitmap.shape
     assert payload.shape == (nm * nk, bs, bc), (payload.shape, nm, nk, bs, bc)
+    M, K = nm * bs, nk * bc
     keep, smap = _prefix(bitmap)
+    if payload_windows is None:
+        payload_windows = not interpret
+    if not payload_windows:
+        return expand_payload(payload, keep, smap, nm, nk, bs, bc)
+
+    item = jnp.dtype(payload.dtype).itemsize
+    dstm, dstk = gather_supertiles(M, K, bs, bc, item)
+    stm, stk = stm or dstm, stk or dstk
+    validate_supertile(M, K, bs, bc, stm, stk)
+    R, C = stm // bs, stk // bc
+
+    def _p_idx(i, kc, smap, keep, *, r, j):
+        # dead block: revolving-door fetch of an arbitrary valid slot,
+        # zeroed in-kernel (exclusive prefix sum <= n_live <= nb - 1
+        # whenever a dead block exists, so the index stays in bounds).
+        return (smap[(i * R + r) * nk + kc * C + j], 0, 0)
 
     return pl.pallas_call(
-        functools.partial(_unpack_kernel, nk=nk),
+        functools.partial(_unpack_kernel, R=R, C=C, bs=bs, nk=nk),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(nm, nk),
-            in_specs=[
-                # dead block: revolving-door fetch of an arbitrary valid slot,
-                # zeroed in-kernel (exclusive prefix sum <= n_live <= nb - 1
-                # whenever a dead block exists, so the index stays in bounds).
-                pl.BlockSpec(
-                    (1, bs, bc), lambda i, j, smap, keep: (smap[i * nk + j], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((bs, bc), lambda i, j, smap, keep: (i, j)),
+            grid=(nm // R, nk // C),
+            in_specs=[pl.BlockSpec((1, bs, bc),
+                                   functools.partial(_p_idx, r=r, j=j))
+                      for r in range(R) for j in range(C)],
+            out_specs=pl.BlockSpec((stm, stk),
+                                   lambda i, kc, smap, keep: (i, kc)),
         ),
-        out_shape=jax.ShapeDtypeStruct((nm * bs, nk * bc), payload.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, K), payload.dtype),
         interpret=interpret,
-    )(smap, keep, payload)
+    )(smap, keep, *([payload] * (R * C)))

@@ -69,11 +69,15 @@ def zebra_pack_ref(x: jax.Array, bitmap: jax.Array, bs: int, bc: int
 
 def zebra_unpack_ref(payload: jax.Array, bitmap: jax.Array, bs: int, bc: int
                      ) -> jax.Array:
-    """Inverse of zebra_pack_ref: scatter payload slots back to (M, K)."""
+    """Inverse of zebra_pack_ref: scatter payload slots back to (M, K).
+    Dead blocks are where-gated (not multiplied) to exact +0, matching
+    the kernels — a dead block's slot aliases a live block, and * would
+    leak NaN/Inf from it."""
     nm, nk = bitmap.shape
     keep = bitmap.reshape(-1).astype(jnp.int32)
     src = jnp.cumsum(keep) - keep                     # exclusive prefix sum
-    blocks = payload[src] * keep[:, None, None].astype(payload.dtype)
+    blocks = jnp.where((keep != 0)[:, None, None], payload[src],
+                       jnp.zeros((), payload.dtype))
     return _from_blocks(blocks, nm, nk)
 
 

@@ -1,19 +1,31 @@
-"""Pallas TPU kernel: GEMM over the *compressed* Zebra stream.
+"""Pallas TPU kernel: supertiled GEMM over the *compressed* Zebra stream.
 
-``zebra_spmm_cs`` computes ``y = mask(x) @ w`` reading its activations
-straight from the ``(payload, bitmap)`` stream that ``zebra_mask_pack``
-produced — the dense masked map is never reconstructed. The bitmap's
-exclusive prefix sum (scalar-prefetched in SMEM) is the block -> payload
-slot index map, so a live K-block's tile is fetched from its compacted
-payload slot and a dead K-block is never fetched at all: the BlockSpec
-replays the prefix-sum slot (which for a dead block equals the *next*
-live block's slot — an in-bounds revolving-door reuse) and ``pl.when``
-drops its contribution.
+``zebra_spmm_cs`` computes ``y = mask(x) @ w`` from the ``(payload,
+bitmap)`` stream that ``zebra_mask_pack`` produced. The bitmap's
+exclusive prefix sum is the block -> payload-slot map; accumulation
+order, supertile shapes and the in-kernel panel assembly are *identical*
+to ``zebra_spmm`` (the dense-input consumer), so the result is
+bitwise-equal to it — which is itself the reference masking + matmul.
 
-Accumulation order and tile shapes are identical to ``zebra_spmm`` (K
-innermost, fp32 VMEM accumulator, one (bs, bc) activation block per K
-step), so the result is bitwise-equal to the dense-input kernel — which
-is itself bitwise-equal to ``reference`` masking + dense matmul.
+Like the producer, the consumer has two executable realizations of the
+one contract, selected by ``payload_windows`` (default: the TPU form
+when ``interpret=False``):
+
+* **TPU form** (``payload_windows=True``): the grid steps over
+  ``(stm, stk)`` supertiles and every ``(bs, bc)`` block of the
+  supertile is fetched straight from its compacted payload slot through
+  its own scalar-prefetch-indexed BlockSpec — ``R·C`` windows per step.
+  A dead block's window replays the prefix-sum slot (the in-bounds
+  revolving-door re-use) and is zero-gated in-kernel, so dead K-blocks
+  cost no *new* HBM traffic and the dense map is never reconstructed.
+* **interpret form** (CPU containers): the same slot map drives one XLA
+  blocked gather that expands the payload back to the dense operand,
+  which then feeds the *same* supertiled GEMM kernel as ``zebra_spmm``
+  with plain aligned windows. Pallas's interpreter charges ~100 us per
+  dynamically-indexed window fetch and duplicates multi-spec operands
+  in the grid carry, so the gather is the faster realization of the
+  identical dataflow on CPU; numerics are unchanged because the kernel
+  re-gates every block by its keep flag either way.
 """
 from __future__ import annotations
 
@@ -25,36 +37,75 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..utils import cdiv
+from .supertile import gemm_supertiles, validate_supertile
+from .zebra_spmm import (gemm_supertile_body, launch_supertile_gemm,
+                         seg_live)
 
 
-def _spmm_cs_kernel(smap_ref, keep_ref, p_ref, w_ref, y_ref, acc_ref, *,
-                    nk: int):
-    i, k = pl.program_id(0), pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    live = keep_ref[i * nk + k] != 0
-
-    @pl.when(live)
-    def _acc():
-        acc_ref[...] += jnp.dot(p_ref[...][0], w_ref[...],
-                                preferred_element_type=jnp.float32)
-
-    @pl.when(k == nk - 1)
-    def _flush():
-        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+def _spmm_cs_kernel(smap_ref, keep_ref, seg_ref, *refs, R: int, C: int,
+                    bs: int, bc: int, nk: int, GK: int):
+    """Payload-window flavor: blocks come from the R*C dynamically
+    slotted payload windows; the step itself IS gemm_supertile_body, so
+    the bitwise parity with zebra_spmm is structural, not copy-pasted."""
+    del smap_ref                        # consumed by the BlockSpec index maps
+    p_refs, w_ref, y_ref, acc_ref = \
+        refs[:R * C], refs[R * C], refs[R * C + 1], refs[R * C + 2]
+    gemm_supertile_body(
+        keep_ref, seg_ref,
+        lambda r, j: p_refs[r * C + j][...][0],
+        w_ref, y_ref, acc_ref, R=R, C=C, bc=bc, nk=nk, GK=GK)
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "interpret"))
+def _payload_window_launch(payload, w, keep, smap, *, bs, bc, stm, stk, bn,
+                           nm, nk, interpret):
+    """The payload-direct TPU form: R*C dynamically-slotted payload
+    windows per supertile step."""
+    K, N = w.shape
+    R, C = stm // bs, stk // bc
+    GM, GN, GK = nm // R, cdiv(N, bn), nk // C
+    # only seg: the payload form addresses its fetches through smap, so
+    # the dense form's revolving-door kmap would be computed then thrown
+    # away here
+    seg = seg_live(keep, nm, nk, R, C).reshape(-1).astype(jnp.int32)
+
+    def _p_idx(i, jn, kc, smap, keep, seg, *, r, j):
+        return (smap[(i * R + r) * nk + kc * C + j], 0, 0)
+
+    kernel = functools.partial(_spmm_cs_kernel, R=R, C=C, bs=bs, bc=bc,
+                               nk=nk, GK=GK)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(GM, GN, GK),
+            in_specs=[pl.BlockSpec((1, bs, bc),
+                                   functools.partial(_p_idx, r=r, j=j))
+                      for r in range(R) for j in range(C)] +
+                     [pl.BlockSpec((stk, bn),
+                                   lambda i, jn, kc, smap, keep, seg:
+                                   (kc, jn))],
+            out_specs=pl.BlockSpec(
+                (stm, bn), lambda i, jn, kc, smap, keep, seg: (i, jn)),
+            scratch_shapes=[pltpu.VMEM((stm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((nm * bs, N), jnp.float32),
+        interpret=interpret,
+    )(smap, keep, seg, *([payload] * (R * C)), w)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "stm", "stk",
+                                             "payload_windows", "interpret"))
 def zebra_spmm_cs(payload: jax.Array, w: jax.Array, bitmap: jax.Array, *,
-                  bs: int = 8, bc: int = 128, bn: int = 256,
+                  bs: int = 8, bc: int = 128, bn: int | None = None,
+                  stm: int | None = None, stk: int | None = None,
+                  payload_windows: bool | None = None,
                   interpret: bool = True) -> jax.Array:
     """(n_blocks, bs, bc) payload x (K, N) weight -> (M, N) fp32.
 
     ``bitmap`` is the (M//bs, K//bc) keep map; payload slots follow
-    ``zebra_mask_pack``'s row-major live-first order.
+    ``zebra_mask_pack``'s row-major live-first order. Supertiles default
+    to the same chooser as ``zebra_spmm`` — the two must tile alike for
+    their bitwise parity to hold.
     """
     nm, nk = bitmap.shape
     K, N = w.shape
@@ -62,25 +113,26 @@ def zebra_spmm_cs(payload: jax.Array, w: jax.Array, bitmap: jax.Array, *,
         raise ValueError(f"w rows {K} != bitmap cols {nk} * bc {bc}")
     if payload.shape != (nm * nk, bs, bc):
         raise ValueError(f"payload {payload.shape} != ({nm * nk}, {bs}, {bc})")
-    bn = min(bn, N)
-    nn = cdiv(N, bn)
+    M = nm * bs
+    dstm, dstk, dbn = gemm_supertiles(M, K, N, bs, bc,
+                                      jnp.dtype(payload.dtype).itemsize)
+    stm, stk, bn = stm or dstm, stk or dstk, min(bn or dbn, N)
+    validate_supertile(M, K, bs, bc, stm, stk)
+    if payload_windows is None:
+        payload_windows = not interpret
     keep = bitmap.reshape(-1).astype(jnp.int32)
     smap = (jnp.cumsum(keep) - keep).astype(jnp.int32)   # block -> slot
 
-    out = pl.pallas_call(
-        functools.partial(_spmm_cs_kernel, nk=nk),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(nm, nn, nk),
-            in_specs=[
-                pl.BlockSpec((1, bs, bc),
-                             lambda i, j, k, smap, keep: (smap[i * nk + k], 0, 0)),
-                pl.BlockSpec((bc, bn), lambda i, j, k, smap, keep: (k, j)),
-            ],
-            out_specs=pl.BlockSpec((bs, bn), lambda i, j, k, smap, keep: (i, j)),
-            scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((nm * bs, N), jnp.float32),
-        interpret=interpret,
-    )(smap, keep, payload, w)
-    return out
+    if payload_windows:
+        return _payload_window_launch(payload, w, keep, smap, bs=bs, bc=bc,
+                                      stm=stm, stk=stk, bn=bn, nm=nm, nk=nk,
+                                      interpret=interpret)
+
+    # interpret form: one XLA blocked gather (pack.expand_payload, shared
+    # with zebra_unpack) expands the stream back to the dense operand;
+    # the supertiled GEMM kernel (shared with zebra_spmm) re-gates every
+    # block by keep, so slot-replayed blocks never leak.
+    from .pack import expand_payload
+    x2 = expand_payload(payload, keep, smap, nm, nk, bs, bc)
+    return launch_supertile_gemm(x2, w, keep, bs=bs, bc=bc, stm=stm, stk=stk,
+                                 bn=bn, interpret=interpret)

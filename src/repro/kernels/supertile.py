@@ -1,0 +1,144 @@
+"""Supertile choosers — grid coarseness policy for the Zebra kernel layer.
+
+The fast path lives or dies on *grid coarseness*: a Pallas grid that
+steps one ``(8, 128)`` Zebra block at a time pays the per-step machinery
+(index-map evaluation, window DMA, accumulator revisit) once per block,
+which is exactly the regime where the compressed path loses to the dense
+matmul it is supposed to beat. Every kernel in this package therefore
+works on **supertiles** — ``(stm, stk)`` windows spanning an integer
+number of Zebra blocks — and this module is the one place the supertile
+shapes are chosen, so the dense-input GEMM (``zebra_spmm``), the
+compressed-stream GEMM (``zebra_spmm_cs``) and the payload expander
+(``zebra_unpack``) can never disagree about tiling (their bitwise parity
+depends on identical accumulation partitioning).
+
+Policy:
+
+* supertile sides are block-aligned **divisors** of the map sides, so
+  grids never produce ragged edge windows (a comparator tile may be
+  padded by XLA; a payload gather window may not);
+* the number of blocks per supertile is capped (``R`` block rows x
+  ``C`` block cols) because the compressed consumers fetch one payload
+  window *per block* of the supertile — the cap bounds the per-step
+  BlockSpec count;
+* everything fits ``vmem_budget_bytes`` (``ZebraConfig.tiles_for``
+  threads its budget through; standalone kernel calls use
+  ``DEFAULT_VMEM_BUDGET``), accounting for the operand windows the
+  kernel actually holds per step.
+"""
+from __future__ import annotations
+
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024   # ~half a 16 MB TPU core
+
+# Per-supertile block caps: R block rows x C block cols. The compressed
+# consumers carry R*C payload BlockSpecs per grid step, so R*C is also
+# the per-step window count — 32 windows of (8, 128) f32 is 128 KiB.
+MAX_ROW_BLOCKS = 4
+MAX_COL_BLOCKS = 8
+
+# The parallel pack phase writes W payload slots per grid step, reading
+# W independently-addressed (bs, bc) source windows.
+MAX_PACK_WINDOW = 16
+
+
+def validate_supertile(M: int, K: int, bs: int, bc: int, stm: int,
+                       stk: int) -> None:
+    """Explicit (stm, stk) must be block-aligned divisors of the map —
+    the grid computes GM = (M/bs) // R and would silently drop trailing
+    output rows/columns otherwise."""
+    if stm % bs or stk % bc:
+        raise ValueError(f"supertile ({stm},{stk}) must divide by block "
+                         f"({bs},{bc})")
+    if (M // bs) % (stm // bs) or (K // bc) % (stk // bc):
+        raise ValueError(
+            f"supertile ({stm},{stk}) must divide the ({M},{K}) map's "
+            f"block grid ({M // bs}x{K // bc}) — ragged supertiles would "
+            f"leave output windows unwritten")
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (>= 1)."""
+    for d in range(min(n, cap), 1, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _divisors_desc(n: int, cap: int) -> list[int]:
+    return [d for d in range(min(n, cap), 0, -1) if n % d == 0]
+
+
+def comparator_tiles(M: int, K: int, bs: int, bc: int, itemsize: int,
+                     budget: int = DEFAULT_VMEM_BUDGET) -> tuple[int, int]:
+    """Comparator tile (tm, tk) for the bitmap/masking passes: the pass
+    holds an input tile and an output tile in VMEM (2 * tm * tk *
+    itemsize; the bitmap tile is negligible), so take the widest
+    block-aligned tk that leaves at least one block row in budget, then
+    the tallest block-aligned tm that fits — bf16 maps get twice the
+    f32 tile. Never below one (bs, bc) block; XLA pads sub-tile maps."""
+    budget = max(int(budget), 2 * bs * bc * itemsize)
+    tk = max(min(K, (budget // (2 * bs * itemsize) // bc) * bc), bc)
+    tm = max(min(M, (budget // (2 * tk * itemsize) // bs) * bs), bs)
+    return tm, tk
+
+
+def gemm_supertiles(M: int, K: int, N: int, bs: int, bc: int,
+                    itemsize: int, budget: int = DEFAULT_VMEM_BUDGET
+                    ) -> tuple[int, int, int]:
+    """GEMM supertile ``(stm, stk, bn)`` for a (M, K) x (K, N) product
+    with (bs, bc) Zebra blocks.
+
+    Per grid step the GEMM holds: the activation supertile (stm, stk) —
+    dense window or R*C payload windows, same bytes — the weight window
+    (stk, bn), the fp32 accumulator and the output window (stm, bn).
+    The chooser takes the largest block-count divisors under the caps
+    that fit ``budget``, shrinking bn last (it trades grid steps in N,
+    not supertile coarseness). Never shrinks below one (bs, bc) block.
+    """
+    nm, nk = M // bs, K // bc
+    floor_bn = min(N, 8)
+    bns, b = [], min(256, N)
+    while b > floor_bn:
+        bns.append(b)
+        b //= 2
+    bns.append(floor_bn)
+    # supertile coarseness first (it is the grid-shrink lever), bn last;
+    # the fixed visit order makes the choice monotone in itemsize, so a
+    # bf16 map never gets a smaller supertile than the f32 map.
+    for R in _divisors_desc(nm, MAX_ROW_BLOCKS):
+        for C in _divisors_desc(nk, MAX_COL_BLOCKS):
+            for bn in bns:
+                stm, stk = R * bs, C * bc
+                cost = (stm * stk * itemsize          # activation windows
+                        + stk * bn * itemsize         # weight window
+                        + stm * bn * 4                # fp32 accumulator
+                        + stm * bn * 4)               # fp32 output window
+                if cost <= budget:
+                    return stm, stk, bn
+    return bs, bc, floor_bn
+
+
+def gather_supertiles(M: int, K: int, bs: int, bc: int, itemsize: int,
+                      budget: int = DEFAULT_VMEM_BUDGET) -> tuple[int, int]:
+    """Supertile ``(stm, stk)`` for the payload expander (zebra_unpack):
+    per step it holds R*C payload windows plus the dense (stm, stk)
+    output window. Never shrinks below one block."""
+    nm, nk = M // bs, K // bc
+    for R in _divisors_desc(nm, MAX_ROW_BLOCKS):
+        for C in _divisors_desc(nk, MAX_COL_BLOCKS):
+            stm, stk = R * bs, C * bc
+            if 2 * stm * stk * itemsize <= budget:
+                return stm, stk
+    return bs, bc
+
+
+def pack_window(n_blocks: int, bs: int = 8, bc: int = 128,
+                itemsize: int = 4, budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Payload slots written per grid step by the parallel pack phase —
+    the largest divisor of the block count (a divisor so the slot
+    windows tile the payload exactly) under both the window cap and the
+    VMEM budget: each step holds W (bs, bc) source windows plus the
+    (W, bs, bc) output window, 2*W*bs*bc*itemsize bytes."""
+    cap = min(MAX_PACK_WINDOW,
+              max(int(budget) // (2 * bs * bc * itemsize), 1))
+    return largest_divisor(max(n_blocks, 1), cap)

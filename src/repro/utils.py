@@ -68,6 +68,31 @@ def check_finite(tree: PyTree) -> jax.Array:
     return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
 
 
+def pallas_eqns(jaxpr) -> list:
+    """Every pallas_call equation in a jaxpr, in trace order, recursing
+    through sub-jaxprs. THE launch counter — the structural contract
+    tests (tests/test_mask_pack.py) and the kernel benchmarks
+    (benchmarks/kernel_bench.py) must count the same way, so both use
+    this."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+            continue                     # kernel bodies never nest launches
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    out.extend(pallas_eqns(sub.jaxpr))
+                elif isinstance(sub, jax.core.Jaxpr):
+                    out.extend(pallas_eqns(sub))
+    return out
+
+
+def pallas_grids(jaxpr) -> list[tuple[int, ...]]:
+    """Grid shape of every pallas_call in a jaxpr, in trace order."""
+    return [tuple(e.params["grid_mapping"].grid) for e in pallas_eqns(jaxpr)]
+
+
 def human_bytes(n: float) -> str:
     for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
         if abs(n) < 1024.0:

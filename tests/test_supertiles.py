@@ -1,0 +1,173 @@
+"""ZebraConfig.tiles_for supertile selection: GEMM/gather kinds, VMEM
+budget boundaries, non-divisible shrink paths, and the fits-the-budget
+regression for f32 and bf16."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ZebraConfig
+from repro.kernels import supertile as st
+
+
+def _gemm_cost(stm, stk, bn, item):
+    return stm * stk * item + stk * bn * item + stm * bn * 4 + stm * bn * 4
+
+
+@pytest.mark.parametrize("dtype,item", [(jnp.float32, 4), (jnp.bfloat16, 2)])
+def test_gemm_supertile_fits_budget(dtype, item):
+    """Regression: the chosen supertile's per-step working set (activation
+    windows + weight window + fp32 accumulator/output) really fits
+    vmem_budget_bytes, for both dtypes."""
+    for budget in (64 * 1024, 256 * 1024, 8 * 1024 * 1024):
+        cfg = ZebraConfig(vmem_budget_bytes=budget)
+        M, K, N, bs, bc = 256, 1024, 512, 8, 128
+        stm, stk, bn = cfg.tiles_for(M, K, bs, bc, dtype, kind="gemm", n=N)
+        assert stm % bs == 0 and stk % bc == 0
+        assert M % stm == 0 and K % stk == 0          # divisor-constrained
+        assert _gemm_cost(stm, stk, bn, item) <= budget or \
+            (stm, stk) == (bs, bc)                    # never below one block
+
+
+def test_gemm_supertile_budget_boundary():
+    """Right at the boundary the chooser steps down; one byte above, it
+    keeps the bigger supertile."""
+    M, K, N, bs, bc = 256, 1024, 512, 8, 128
+    item = 4
+    big = ZebraConfig(vmem_budget_bytes=8 * 1024 * 1024)
+    stm, stk, bn = big.tiles_for(M, K, bs, bc, jnp.float32, kind="gemm", n=N)
+    cost = _gemm_cost(stm, stk, bn, item)
+    at = ZebraConfig(vmem_budget_bytes=cost)
+    assert at.tiles_for(M, K, bs, bc, jnp.float32, kind="gemm", n=N) \
+        == (stm, stk, bn)
+    below = ZebraConfig(vmem_budget_bytes=cost - 1)
+    stm2, stk2, bn2 = below.tiles_for(M, K, bs, bc, jnp.float32,
+                                      kind="gemm", n=N)
+    assert (stm2 // bs) * (stk2 // bc) < (stm // bs) * (stk // bc) \
+        or bn2 < bn
+
+
+def test_gemm_supertile_bf16_at_least_f32_area():
+    cfg = ZebraConfig(vmem_budget_bytes=128 * 1024)
+    M, K, N, bs, bc = 512, 2048, 512, 8, 128
+    f32 = cfg.tiles_for(M, K, bs, bc, jnp.float32, kind="gemm", n=N)
+    bf16 = cfg.tiles_for(M, K, bs, bc, jnp.bfloat16, kind="gemm", n=N)
+    assert bf16[0] * bf16[1] >= f32[0] * f32[1]
+
+
+def test_gemm_supertile_non_divisible_block_counts_shrink():
+    """Maps whose block counts are not powers of two take divisor
+    supertiles (never ragged windows): nm=6 -> R=3, nk=5 -> C=5."""
+    cfg = ZebraConfig()
+    bs, bc = 8, 128
+    M, K = 6 * bs, 5 * bc
+    stm, stk, _ = cfg.tiles_for(M, K, bs, bc, jnp.float32, kind="gemm", n=64)
+    assert M % stm == 0 and K % stk == 0
+    assert stm == 3 * bs                  # largest divisor of 6 under cap 4
+    assert stk == 5 * bc                  # 5 <= cap 8 and divides
+    # prime block counts above the caps degenerate to one block per side
+    stm_p, stk_p, _ = cfg.tiles_for(7 * bs, 13 * bc, bs, bc, jnp.float32,
+                                    kind="gemm", n=64)
+    assert stm_p == bs and stk_p == bc
+
+
+def test_gemm_supertile_caps_bound_per_step_windows():
+    """The compressed consumer carries one payload window per block of
+    the supertile — the chooser must respect the module caps."""
+    cfg = ZebraConfig(vmem_budget_bytes=64 * 1024 * 1024)   # effectively inf
+    stm, stk, _ = cfg.tiles_for(4096, 8192, 8, 128, jnp.float32,
+                                kind="gemm", n=4096)
+    assert stm // 8 <= st.MAX_ROW_BLOCKS
+    assert stk // 128 <= st.MAX_COL_BLOCKS
+
+
+def test_gather_supertile_fits_and_divides():
+    cfg = ZebraConfig(vmem_budget_bytes=96 * 1024)
+    M, K, bs, bc = 256, 1024, 8, 128
+    stm, stk = cfg.tiles_for(M, K, bs, bc, jnp.float32, kind="gather")
+    assert M % stm == 0 and K % stk == 0
+    assert 2 * stm * stk * 4 <= cfg.vmem_budget_bytes
+    tiny = ZebraConfig(vmem_budget_bytes=1)
+    assert tiny.tiles_for(M, K, bs, bc, jnp.float32, kind="gather") == (bs, bc)
+
+
+def test_pack_window_divides_block_count():
+    assert st.pack_window(256) == 16
+    assert st.pack_window(21) == 7
+    assert st.pack_window(13) == 13       # <= cap and divides itself
+    assert st.pack_window(17) == 1        # prime above cap
+    assert st.pack_window(1) == 1
+
+
+def test_pack_window_respects_vmem_budget():
+    """The pack pass holds 2*W*bs*bc*itemsize bytes per step — a small
+    budget must shrink W below the fixed cap (and never below 1)."""
+    bs, bc, item = 8, 128, 4
+    per_slot = 2 * bs * bc * item                     # 8 KiB per W
+    assert st.pack_window(256, bs, bc, item, budget=4 * per_slot) == 4
+    assert st.pack_window(256, bs, bc, item, budget=1) == 1
+    # W stays a divisor under the budget cap: cap 6 -> largest divisor 4
+    assert st.pack_window(256, bs, bc, item, budget=6 * per_slot) == 4
+
+
+def test_tiles_for_unknown_kind_and_missing_n_raise():
+    cfg = ZebraConfig()
+    with pytest.raises(ValueError):
+        cfg.tiles_for(64, 256, 8, 128, jnp.float32, kind="nope")
+    with pytest.raises(ValueError):
+        cfg.tiles_for(64, 256, 8, 128, jnp.float32, kind="gemm")
+
+
+def test_explicit_ragged_supertile_raises():
+    """Explicit stm/stk that don't divide the block grid must raise —
+    GM = nm // R truncation would silently leave output rows unwritten."""
+    import jax
+    from repro.kernels import zebra_mask_pack_op, zebra_spmm_cs_op, \
+        zebra_spmm_op, zebra_mask_op
+    bs, bc = 8, 128
+    x = jnp.ones((48, 256), jnp.float32)           # nm=6, nk=2
+    w = jnp.ones((256, 64), jnp.float32)
+    _, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)
+    payload, bmf, _ = zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)
+    with pytest.raises(ValueError, match="divide"):
+        zebra_spmm_op(x, w, bm, bs=bs, bc=bc, stm=32)      # R=4 !| nm=6
+    with pytest.raises(ValueError, match="divide"):
+        zebra_spmm_cs_op(payload, w, bmf, bs=bs, bc=bc, stm=32)
+    with pytest.raises(ValueError, match="block"):
+        zebra_spmm_op(x, w, bm, bs=bs, bc=bc, stm=12)      # not bs-aligned
+
+
+def test_vmem_bounded_backend_degrades_over_budget():
+    """A registered backend declaring vmem_bounded really is gated by the
+    engine: maps over vmem_budget_bytes degrade to reference with the
+    explicit 'vmem-bounded' reason (the built-ins self-tile and never
+    hit it)."""
+    from repro.core.backends import BackendSpec
+    from repro.core.engine import _resolve_backend
+    bounded = BackendSpec("bounded-test", trainable=False,
+                          emits_stream=False, consumes_w=False,
+                          vmem_bounded=True)
+    assert _resolve_backend(bounded, mode="infer", tnet=None,
+                            degenerate=False, over_budget=True) \
+        == ("reference", "vmem-bounded")
+    assert _resolve_backend(bounded, mode="infer", tnet=None,
+                            degenerate=False, over_budget=False) \
+        == ("bounded-test", None)
+    # built-in stream self-tiles: vmem_bounded False, stays on backend
+    from repro.core.backends import backend_spec
+    assert not backend_spec("stream").vmem_bounded
+    assert not backend_spec("fused").vmem_bounded
+
+
+def test_unpack_xla_form_gates_nonfinite_dead_slots():
+    """Regression: the interpret-form expander must jnp.where-gate dead
+    blocks, not multiply — a dead block's revolving-door slot aliases a
+    live block, and Inf * 0 would leak NaN where the kernel writes 0."""
+    import numpy as np
+    from repro.kernels import zebra_mask_op, zebra_pack_op, zebra_unpack_op
+    bs, bc = 8, 128
+    x = jnp.zeros((16, 128), jnp.float32).at[0, 0].set(jnp.inf)  # 1 live,
+    y, bm = zebra_mask_op(x, 0.5, bs=bs, bc=bc)                  # 1 dead
+    payload, _ = zebra_pack_op(y, bm, bs=bs, bc=bc)
+    out = np.asarray(zebra_unpack_op(payload, bm, bs=bs, bc=bc))
+    assert np.isinf(out[0, 0])
+    assert not np.any(out[bs:])                    # dead block: exact zeros
+    assert not np.any(np.isnan(out))
