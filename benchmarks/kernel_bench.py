@@ -27,6 +27,19 @@ tests pin the same numbers), so the column tracks what actually runs on
 this container. `speedup_vs_ref` on a fused row is composed_us/fused_us;
 on the standalone kernel rows it is the row's jnp reference time over
 the kernel time.
+
+`speedup_vs_dense` is the headline the CI gate enforces (>1 at the
+paper's ~64%-zeros operating point): on `kernel/zebra_spmm` it is the
+plain dense matmul time over the consumer time (the bench the old,
+misnamed `speedup_vs_ref` field actually measured — the old key is kept
+one release as a deprecated alias); on the `spmm_cs` pair rows it is
+the single-jit mask+dense-matmul pipeline (`dense_pipeline_us` — what
+the fused site replaces end to end) over the row time, with the plain
+`dense_matmul_us` also emitted so both denominators stay transparent.
+The consumers run their scheduled form (static prefetch schedule over
+the consumer-ordered payload + the cached `gemm_plan` capacity ladder,
+`consumer_form`/`caps` columns) — the rearchitecture that turned
+`speedup_vs_ref 0.14` into a win.
 """
 from __future__ import annotations
 
@@ -71,13 +84,16 @@ def _pair_rows(name, fused_fn, composed_fn, fused_meta, composed_meta,
 def run(budget=None, quick=True) -> list[dict]:
     rows = []
     M, K, N, bs, bc = 256, 1024, 512, 8, 128
+    # the paper's operating point: ~64% zero blocks (live < 0.4 draws)
+    zf_hint = 0.64
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (M, K), jnp.float32)
     live = (jax.random.uniform(jax.random.PRNGKey(1), (M // bs, K // bc)) < 0.4)
     x = x * jnp.repeat(jnp.repeat(live.astype(jnp.float32), bs, 0), bc, 1) * 2 + x * 0.01
     w = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
-    cfg = ZebraConfig(mode="infer")
-    stm, stk, bn = cfg.tiles_for(M, K, bs, bc, x.dtype, kind="gemm", n=N)
+    cfg = ZebraConfig(mode="infer", zero_frac_hint=zf_hint)
+    plan = cfg.gemm_plan_for(M, K, bs, bc, x.dtype, n=N)
+    stm, stk, bn = plan.stm, plan.stk, plan.bn
 
     t_ref = timeit(lambda: ref.zebra_mask_ref(x, 0.5, bs, bc), iters=20)
     t_ker = timeit(lambda: zebra_mask_op(x, 0.5, bs=bs, bc=bc), iters=5)
@@ -91,12 +107,18 @@ def run(budget=None, quick=True) -> list[dict]:
                  "hbm_bytes_saved_per_call": int(saved),
                  "index_bytes": (M // bs) * (K // bc)})
 
-    t_spmm = timeit(lambda: zebra_spmm_op(x, w, bm, bs=bs, bc=bc), iters=5)
+    t_spmm = timeit(lambda: zebra_spmm_op(x, w, bm, bs=bs, bc=bc,
+                                          zero_frac_hint=zf_hint), iters=5)
     t_dense = timeit(lambda: (x @ w), iters=20)
     rows.append({"name": "kernel/zebra_spmm", "us_per_call": t_spmm,
                  "dense_matmul_us": round(t_dense, 1),
+                 # the correctly-named headline the CI gate enforces; the
+                 # misnamed legacy key rides along one release (same value)
+                 "speedup_vs_dense": round(t_dense / t_spmm, 2),
                  "speedup_vs_ref": round(t_dense / t_spmm, 2),
+                 "zero_frac": round(zf, 3),
                  "supertile": [stm, stk, bn],
+                 "consumer_form": "scheduled", "caps": list(plan.caps),
                  "mxu_blocks_skipped_frac": round(zf, 3),
                  "flops_skipped": int(zf * 2 * M * K * N)})
 
@@ -133,19 +155,35 @@ def run(budget=None, quick=True) -> list[dict]:
         {"dense_map_hbm_crossings": 4,
          "dense_bytes_crossed": 4 * dense_b, "stream_bytes": stream_b})
 
-    y_cs = zebra_spmm_cs_op(payload_f, w, bm_f, bs=bs, bc=bc)
-    y_sp = zebra_spmm_op(y, w, bm, bs=bs, bc=bc)
+    y_cs = zebra_spmm_cs_op(payload_f, w, bm_f, bs=bs, bc=bc,
+                            zero_frac_hint=zf_hint)
+    y_sp = zebra_spmm_op(y, w, bm, bs=bs, bc=bc, zero_frac_hint=zf_hint)
     np.testing.assert_array_equal(np.asarray(y_cs), np.asarray(y_sp))
-    rows += _pair_rows(
+    # what the fused site replaces end to end: ONE jit of comparator mask
+    # + dense matmul (the denominator of the pair rows' speedup_vs_dense)
+    dense_pipeline = jax.jit(
+        lambda xx: ref.zebra_mask_ref(xx, 0.5, bs, bc)[0] @ w)
+    t_pipeline = timeit(lambda: dense_pipeline(x), iters=5)
+    fused_rows = _pair_rows(
         "spmm_cs",
         lambda: zebra_spmm_cs_op(zebra_mask_pack_op(x, 0.5, bs=bs, bc=bc)[0],
-                                 w, bm_f, bs=bs, bc=bc),
+                                 w, bm_f, bs=bs, bc=bc,
+                                 zero_frac_hint=zf_hint),
         lambda: zebra_spmm_op(zebra_mask_op(x, 0.5, bs=bs, bc=bc)[0],
-                              w, bm, bs=bs, bc=bc),
+                              w, bm, bs=bs, bc=bc, zero_frac_hint=zf_hint),
         {"dense_map_hbm_crossings": 2, "supertile": [stm, stk, bn],
+         "consumer_form": "scheduled", "caps": list(plan.caps),
+         "zero_frac": round(zf, 3),
          "dense_bytes_crossed": 2 * dense_b, "stream_bytes": stream_b},
         {"dense_map_hbm_crossings": 3, "supertile": [stm, stk, bn],
+         "consumer_form": "scheduled", "caps": list(plan.caps),
+         "zero_frac": round(zf, 3),
          "dense_bytes_crossed": 3 * dense_b, "stream_bytes": stream_b})
+    for r in fused_rows:
+        r["dense_matmul_us"] = round(t_dense, 1)
+        r["dense_pipeline_us"] = round(t_pipeline, 1)
+        r["speedup_vs_dense"] = round(t_pipeline / r["us_per_call"], 2)
+    rows += fused_rows
 
     emit(rows, "kernels")
     return rows

@@ -21,9 +21,11 @@ def run(budget=None, quick=True) -> list[dict]:
                      "required_bandwidth_MB": round(req, 2),
                      "index_overhead_pct": round(ovh, 3),
                      "paper_MB": paper_mb, "paper_overhead_pct": paper_ovh})
-    # Eq. 4/5 compute overhead for a representative conv layer
+    # Eq. 4/5 compute overhead for a representative conv layer. A float,
+    # not a formatted string: the trajectory gate compares this field
+    # numerically, and "4.07e-04" != 4.07e-04 byte-compares forever.
     r = zebra_overhead_flops(128, 16, 16) / conv_flops(128, 16, 16, 3, 128)
     rows.append({"name": "table5/zebra_flop_overhead",
-                 "overhead_ratio": f"{r:.2e}", "negligible": r < 1e-2})
+                 "overhead_ratio": float(r), "negligible": bool(r < 1e-2)})
     emit(rows, "table5")
     return rows

@@ -19,6 +19,22 @@ fresh (the intersection must be non-empty per file):
   than 50 us are exempt entirely (pure-overhead rows where scheduler
   jitter exceeds the signal).
 
+Baseline-schema tolerance: the committed baseline may predate rows or
+columns a new bench version added. Fresh-only rows are reported as
+"seeding" (they enter the baseline when the fresh artifacts are
+committed), baseline-only rows as a warning (a rename or a removed
+bench — deliberate removals just need the baseline regenerated), and
+exact-key comparison only applies to keys present on BOTH sides. None
+of these fail the gate; byte drift and latency regression on rows
+present in both always do.
+
+One absolute check rides on the fresh ``BENCH_kernels.json``
+independent of any baseline: the ``kernel/zebra_spmm`` and
+``kernel/spmm_cs.fused`` rows must report ``speedup_vs_dense > 1`` —
+the compressed consumer beating the dense matmul at the ~64%-zeros
+operating point is the acceptance bar of the consumer rearchitecture,
+and a missing row/column is itself a failure.
+
 Usage:
     python scripts/bench_gate.py --baseline DIR --fresh DIR \
         [--tol 3.0] [--slack-us 5000]
@@ -36,6 +52,10 @@ FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json")
 EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes")
 US_EXEMPT_BELOW = 50.0
 
+# rows of the fresh BENCH_kernels.json that must beat dense (the
+# consumer-rearchitecture acceptance bar; checked baseline or not)
+SPEEDUP_ROWS = ("kernel/zebra_spmm", "kernel/spmm_cs.fused")
+
 
 def _rows(path: str) -> dict[str, dict]:
     with open(path) as f:
@@ -49,12 +69,23 @@ def gate_file(base_path: str, fresh_path: str, tol: float,
     base = _rows(base_path)
     fresh = _rows(fresh_path)
     shared = sorted(set(base) & set(fresh))
+    fname = os.path.basename(fresh_path)
     if not shared:
-        return [f"{os.path.basename(fresh_path)}: no row names shared with "
+        return [f"{fname}: no row names shared with "
                 f"the baseline — the bench was renamed without regenerating "
                 f"the committed baseline"]
+    # schema tolerance: new rows seed the trajectory, vanished rows warn
+    for name in sorted(set(fresh) - set(base)):
+        print(f"bench_gate: {fname}: {name}: new row (not in baseline) — "
+              f"seeding, will be gated once committed")
+    for name in sorted(set(base) - set(fresh)):
+        print(f"bench_gate: {fname}: WARNING: baseline row {name} missing "
+              f"from the fresh run (renamed or removed bench? regenerate "
+              f"the baseline if deliberate)")
     for name in shared:
         b, f = base[name], fresh[name]
+        # exact keys compare only where BOTH sides have them: a baseline
+        # predating a newly added column must not fail the gate
         for key in EXACT_KEYS:
             if key in b and key in f and b[key] != f[key]:
                 errors.append(
@@ -66,6 +97,37 @@ def gate_file(base_path: str, fresh_path: str, tol: float,
             errors.append(
                 f"{name}: us_per_call regressed {bus:.1f} -> {fus:.1f} "
                 f"(> {tol:g}x + {slack_us:g} us tolerance)")
+    return errors
+
+
+def gate_speedup(fresh_path: str) -> list[str]:
+    """Absolute acceptance check on the fresh kernels artifact: the
+    compressed consumers must beat their dense baselines (the reason the
+    consumer-order payload + static prefetch schedule exist). No
+    baseline involvement — a fresh run that loses to dense is a
+    regression even on a machine with no committed trajectory."""
+    try:
+        fresh = _rows(fresh_path)
+    except (FileNotFoundError, json.JSONDecodeError, KeyError):
+        return [f"{os.path.basename(fresh_path)}: unreadable — cannot check "
+                f"the speedup_vs_dense acceptance rows"]
+    errors = []
+    for name in SPEEDUP_ROWS:
+        r = fresh.get(name)
+        if r is None:
+            errors.append(f"{name}: row missing from the fresh "
+                          f"BENCH_kernels.json (bench renamed?)")
+            continue
+        if "speedup_vs_dense" not in r:
+            errors.append(f"{name}: speedup_vs_dense column missing (the "
+                          f"bench must emit the dense-baseline ratio)")
+            continue
+        s = float(r["speedup_vs_dense"])
+        if not s > 1.0:
+            errors.append(
+                f"{name}: speedup_vs_dense = {s:g} <= 1 — the compressed "
+                f"consumer lost to the dense matmul at zero_frac "
+                f"{r.get('zero_frac', '?')}")
     return errors
 
 
@@ -106,6 +168,12 @@ def main() -> None:
         status = "FAIL" if errs else "ok"
         print(f"bench_gate: {fname}: {n} fresh rows vs baseline -> {status}")
         all_errors.extend(errs)
+
+    # absolute consumer-beats-dense acceptance rows (baseline-independent)
+    sp_errs = gate_speedup(os.path.join(args.fresh, "BENCH_kernels.json"))
+    print(f"bench_gate: speedup_vs_dense > 1 on {list(SPEEDUP_ROWS)} -> "
+          f"{'FAIL' if sp_errs else 'ok'}")
+    all_errors.extend(sp_errs)
 
     if all_errors:
         print("\nbench_gate FAILED:", file=sys.stderr)

@@ -63,6 +63,44 @@ if not fused:
     sys.exit("FAIL: BENCH_kernels.json has no fused-vs-composed rows")
 print(f"  BENCH_kernels.json: {len(fused)} fused-variant rows OK")
 
+# the consumer bench must run at the paper's ~64%-zeros operating point
+# and emit the correctly-named dense-baseline ratio (the gate row that
+# scripts/bench_gate.py enforces > 1)
+krows = {r["name"]: r for r in docs["BENCH_kernels.json"]["rows"]}
+spmm = krows.get("kernel/zebra_spmm")
+if spmm is None:
+    sys.exit("FAIL: BENCH_kernels.json missing kernel/zebra_spmm")
+zf = spmm.get("zero_frac")
+if not isinstance(zf, (int, float)) or abs(zf - 0.64) > 0.05:
+    sys.exit(f"FAIL: kernel/zebra_spmm zero_frac {zf!r} is not ~0.64 — the "
+             f"bench drifted off the paper's operating point")
+for name in ("kernel/zebra_spmm", "kernel/spmm_cs.fused"):
+    r = krows.get(name)
+    if r is None or not isinstance(r.get("speedup_vs_dense"), (int, float)):
+        sys.exit(f"FAIL: {name} missing a numeric speedup_vs_dense")
+print(f"  BENCH_kernels.json: zero_frac {zf} at the operating point, "
+      f"speedup_vs_dense columns present")
+
+# table5: overhead_ratio must be a NUMBER (it once emitted "4.07e-04"
+# as a string, which no trajectory tooling could compare)
+try:
+    with open("BENCH_table5.json") as f:
+        t5 = json.load(f)
+except FileNotFoundError:
+    sys.exit("FAIL: BENCH_table5.json missing")
+except json.JSONDecodeError as e:
+    sys.exit(f"FAIL: BENCH_table5.json is not valid JSON: {e}")
+ovh = [r for r in t5["rows"] if r["name"] == "table5/zebra_flop_overhead"]
+if not ovh:
+    sys.exit("FAIL: BENCH_table5.json missing table5/zebra_flop_overhead")
+r = ovh[0].get("overhead_ratio")
+if not isinstance(r, float):
+    sys.exit(f"FAIL: table5 overhead_ratio must be a float, got "
+             f"{type(r).__name__}: {r!r}")
+if not (0.0 < r < 1.0):
+    sys.exit(f"FAIL: table5 overhead_ratio {r} outside (0, 1)")
+print(f"  BENCH_table5.json: overhead_ratio {r:.3e} is numeric OK")
+
 # train-step smoke rows: reference AND pallas backends, CNN and LM, loss
 # finite + grads nonzero, and the pallas rows really resolved to the
 # kernel backend (no silent degrade to reference)

@@ -32,6 +32,18 @@ Capabilities:
     supertiled consumers size their windows from ``ZebraConfig.
     tiles_for`` under the budget — so they declare False; the flag
     serves registered backends that cannot self-tile.
+``payload_order``
+    The slot-order contract of the compressed payload the backend emits
+    or consumes. ``"consumer"`` is the GEMM-consumable supertile order
+    of ``kernels.schedule`` — slots grouped by K-block column, columns
+    ascending, block rows ascending within a column, live slots
+    contiguous in ``[0, n_live)`` — which lets the consumer read each K
+    column's operand as ONE contiguous slot run through a static
+    prefetch schedule (zero dynamic-window gathers on the hot path).
+    ``None`` for backends that move no payload. Every ``emits_stream``
+    backend must declare an order: the payload is an interchange format
+    (producer, expander, consumer, codec all address it), so an
+    undeclared order is a registration error, not a default.
 ``grad_variant``
     Which ``kernels.grad`` forward variant implements this backend's
     trainable path (``"mask"`` | ``"stream"``; None = jnp autodiff).
@@ -45,6 +57,9 @@ from __future__ import annotations
 import dataclasses
 
 
+PAYLOAD_ORDERS = ("consumer",)
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
     name: str
@@ -53,6 +68,7 @@ class BackendSpec:
     consumes_w: bool
     vmem_bounded: bool
     grad_variant: str | None = None
+    payload_order: str | None = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -63,6 +79,16 @@ def register_backend(spec: BackendSpec) -> BackendSpec:
         raise ValueError(
             f"backend {spec.name!r}: trainable kernel backends must declare "
             f"a kernels.grad variant (grad_variant)")
+    if spec.emits_stream and spec.payload_order is None:
+        raise ValueError(
+            f"backend {spec.name!r}: stream-emitting backends must declare "
+            f"the payload slot order (payload_order), e.g. 'consumer' — the "
+            f"payload is an interchange format and its order is part of the "
+            f"contract")
+    if spec.payload_order is not None and spec.payload_order not in PAYLOAD_ORDERS:
+        raise ValueError(
+            f"backend {spec.name!r}: unknown payload_order "
+            f"{spec.payload_order!r}; expected one of {PAYLOAD_ORDERS}")
     _REGISTRY[spec.name] = spec
     return spec
 
@@ -97,7 +123,7 @@ register_backend(BackendSpec(
     vmem_bounded=False, grad_variant="mask"))
 register_backend(BackendSpec(
     "stream", trainable=True, emits_stream=True, consumes_w=False,
-    vmem_bounded=False, grad_variant="stream"))
+    vmem_bounded=False, grad_variant="stream", payload_order="consumer"))
 register_backend(BackendSpec(
     "fused", trainable=False, emits_stream=True, consumes_w=True,
-    vmem_bounded=False))
+    vmem_bounded=False, payload_order="consumer"))

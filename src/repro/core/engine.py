@@ -358,18 +358,22 @@ def _run_stream(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig):
 
 def _run_fused(x2: jax.Array, w: jax.Array, bs: int, bc: int,
                cfg: ZebraConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """mask_pack -> supertiled payload-consuming GEMM: the GEMM reads live
-    blocks from the compressed payload in (stm, stk) supertile steps
-    sized by cfg.tiles_for(kind="gemm") — dead K-blocks are skipped in
-    whole-supertile chunks, the dense map is never unpacked.
+    """mask_pack -> payload-consuming GEMM: the consumer reads each K
+    column's live blocks as one contiguous run of the consumer-ordered
+    payload through the static prefetch schedule (kernels.schedule) —
+    dead blocks are skipped, the dense map is never unpacked. The full
+    cached plan (cfg.gemm_plan_for: kernel-form supertile + the
+    scheduled capacity ladder, tightened by cfg.zero_frac_hint) is
+    threaded through, so repeated site launches hit the plan cache.
     Returns (x' @ w, bitmap, fetched bytes)."""
     from ..kernels.spmm_cs import zebra_spmm_cs
     M, K = x2.shape
     payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
-    stm, stk, bn = cfg.tiles_for(M, K, bs, bc, x2.dtype, kind="gemm",
-                                 n=w.shape[-1])
-    out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, bn=bn,
-                        stm=stm, stk=stk, interpret=cfg.interpret)
+    plan = cfg.gemm_plan_for(M, K, bs, bc, x2.dtype, n=w.shape[-1])
+    out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, bn=plan.bn,
+                        stm=plan.stm, stk=plan.stk, caps=plan.caps,
+                        zero_frac_hint=cfg.zero_frac_hint,
+                        interpret=cfg.interpret)
     measured = stream_bytes(n_live, bs, bc, x2.dtype, bitmap.size)
     return out.astype(x2.dtype), bitmap, measured
 

@@ -64,6 +64,14 @@ class ZebraConfig:
                                  # chooser (tiles_for) sizes comparator
                                  # tiles AND GEMM/gather supertiles against
                                  # (~half a 16 MB core)
+    zero_frac_hint: float | None = None
+                                 # expected zero-block fraction at this
+                                 # site (e.g. the paper's ~0.64 operating
+                                 # point). Threaded into the cached
+                                 # gemm_plan chooser, where it tightens
+                                 # the scheduled consumers' capacity
+                                 # ladder; never changes kernel-form
+                                 # supertiles (numerics stay hint-free)
 
     def __post_init__(self):
         # config-time validation against the capability registry — a typo'd
@@ -102,7 +110,11 @@ class ZebraConfig:
         against a (K, ``n``) weight — block-count divisors of the map
         sides (no ragged payload windows) capped per step, accounting
         for the activation windows, the (stk, bn) weight window and the
-        fp32 accumulator/output under the same budget.
+        fp32 accumulator/output under the same budget. Routed through
+        the cached ``supertile.gemm_plan`` chooser (with
+        ``zero_frac_hint``), so repeated site launches hit the plan
+        cache; the engine's fused path reads the full plan (including
+        the scheduled capacity ladder) via ``gemm_plan_for``.
 
         ``kind="gather"``: supertile (stm, stk) for the payload
         expander (``zebra_unpack``).
@@ -110,10 +122,8 @@ class ZebraConfig:
         from ..kernels import supertile as st
         item = jnp.dtype(dtype).itemsize
         if kind == "gemm":
-            if n is None:
-                raise ValueError("kind='gemm' needs the weight width n")
-            return st.gemm_supertiles(M, K, n, bs, bc, item,
-                                      int(self.vmem_budget_bytes))
+            plan = self.gemm_plan_for(M, K, bs, bc, dtype, n=n)
+            return plan.stm, plan.stk, plan.bn
         if kind == "gather":
             return st.gather_supertiles(M, K, bs, bc, item,
                                         int(self.vmem_budget_bytes))
@@ -121,6 +131,18 @@ class ZebraConfig:
             raise ValueError(f"unknown tile kind {kind!r}")
         return st.comparator_tiles(M, K, bs, bc, item,
                                    int(self.vmem_budget_bytes))
+
+    def gemm_plan_for(self, M: int, K: int, bs: int, bc: int, dtype, *,
+                      n: int | None = None):
+        """The full cached GEMM plan (kernel-form supertile + the
+        scheduled consumers' capacity ladder) for an (M, K) x (K, n)
+        site under this config's budget and ``zero_frac_hint``."""
+        from ..kernels import supertile as st
+        if n is None:
+            raise ValueError("kind='gemm' needs the weight width n")
+        return st.gemm_plan(M, K, n, bs, bc, jnp.dtype(dtype).itemsize,
+                            int(self.vmem_budget_bytes),
+                            zero_frac=self.zero_frac_hint)
 
 
 # ---------------------------------------------------------------------------

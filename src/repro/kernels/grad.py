@@ -26,6 +26,12 @@ site matches reference bitwise in f32. Sites with a threshold net
 (per-sample learned thresholds) are *not* kernel-trainable — the engine
 resolves them to reference via the capability registry
 (``core.backends``).
+
+Payload order: the stream variant's forward emits and re-expands the
+payload in the consumer order of ``kernels.schedule`` (column-grouped
+slots). The pipeline here is order-transparent — pack and unpack
+address the stream through the same ``slot_map``, so the round trip
+(and therefore every gradient mode) is unchanged by the reorder.
 """
 from __future__ import annotations
 

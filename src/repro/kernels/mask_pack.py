@@ -10,11 +10,12 @@ a tiny XLA exclusive scan:
    loads its own ``(tm, tk)`` tile, computes per-``(bs, bc)``-block
    maxima and emits the keep bitmap for its tile. Nothing else leaves
    the pass; steps share no state and can run in any order.
-2. **Exclusive scan** (XLA, not a launch): one ``cumsum`` over the keep
-   flags is simultaneously the per-supertile live counts (its blocked
-   segment sums), the per-supertile payload offsets (its values at
-   segment starts) and every block's slot index ``dmap[g]``; a scatter
-   of ``g`` into ``dmap[g]`` inverts it into ``src[slot] -> block``.
+2. **Exclusive scan** (XLA, not a launch): the ``kernels.schedule``
+   prefix sums over the keep flags are simultaneously the per-column
+   live counts, the per-column payload offsets and every block's
+   consumer-order slot index ``dmap[g]`` (column-grouped — the
+   GEMM-consumable order the consumers read contiguously); a scatter of
+   ``g`` into ``dmap[g]`` inverts it into ``src[slot] -> block``.
 3. **Pack pass** (grid over payload slot windows): each step *gathers*
    the ``W`` source blocks for its own window of payload slots through
    ``W`` independently-addressed BlockSpecs (``src`` rides in
@@ -61,6 +62,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..utils import cdiv
+from .schedule import slot_map
 from .supertile import comparator_tiles, pack_window
 
 
@@ -96,8 +98,9 @@ def zebra_mask_pack(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Two-phase comparator + compaction over an (M, K) map.
 
-    Returns ``(payload (n_blocks, bs, bc) — live blocks first in row-major
-    block order, zero tail; bitmap (M//bs, K//bc) int8; n_live () int32)``.
+    Returns ``(payload (n_blocks, bs, bc) — live blocks first in the
+    consumer order of kernels.schedule (column-grouped), zero tail;
+    bitmap (M//bs, K//bc) int8; n_live () int32)``.
     Bitwise-identical to ``zebra_pack(*zebra_mask(x))`` in ≤ 2 launches.
 
     ``tm``/``tk`` size the comparator pass's supertile (defaults to the
@@ -134,8 +137,9 @@ def zebra_mask_pack(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
     )(x)
 
     # -- phase 2a: ONE exclusive scan = counts, offsets and slot map --------
-    keep = bitmap.reshape(-1).astype(jnp.int32)
-    dmap = jnp.cumsum(keep) - keep          # block -> payload slot
+    # the consumer-order slot map (kernels.schedule): column-grouped, so
+    # the downstream GEMM reads each K column as one contiguous slot run
+    keep, dmap = slot_map(bitmap)
     n_live = jnp.sum(keep).astype(jnp.int32)
     g = jnp.arange(nb, dtype=jnp.int32)
     # invert: src[slot] = block index of the slot's live block (0 for tail,
@@ -145,10 +149,12 @@ def zebra_mask_pack(x: jax.Array, *, t_obj: float, bs: int = 8, bc: int = 128,
 
     # -- phase 2b: parallel gather-pack over payload slot windows -----------
     if not gather_kernel:
-        # interpret form: the identical gather as one XLA blocked take
-        xb = (x.reshape(nm, bs, nk, bc).transpose(0, 2, 1, 3)
-              .reshape(nb, bs, bc))
-        payload = jnp.where((g < n_live)[:, None, None], xb[src],
+        # interpret form: the identical gather as one XLA two-index take
+        # straight off the 4-D block view — no transposed block copy of
+        # the whole map on the producer hot path
+        x4 = x.reshape(nm, bs, nk, bc)
+        payload = jnp.where((g < n_live)[:, None, None],
+                            x4[src // nk, :, src % nk, :],
                             jnp.zeros((), x.dtype))
         return payload, bitmap, n_live
 

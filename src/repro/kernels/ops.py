@@ -29,9 +29,13 @@ def zebra_mask_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
 
 def zebra_spmm_op(x: jax.Array, w: jax.Array, bitmap: jax.Array,
                   bs: int = 8, bc: int = 128, stm: int | None = None,
-                  stk: int | None = None, interpret: bool = True):
+                  stk: int | None = None,
+                  caps: tuple[int, ...] | None = None,
+                  zero_frac_hint: float | None = None,
+                  scheduled: bool | None = None, interpret: bool = True):
     return zebra_spmm(x, w, bitmap, bs=bs, bc=bc, stm=stm, stk=stk,
-                      interpret=interpret)
+                      caps=caps, zero_frac_hint=zero_frac_hint,
+                      scheduled=scheduled, interpret=interpret)
 
 
 def zebra_pack_op(x: jax.Array, bitmap: jax.Array, bs: int = 8, bc: int = 128,
@@ -55,10 +59,14 @@ def zebra_mask_pack_op(x: jax.Array, t_obj: float, bs: int = 8, bc: int = 128,
 
 def zebra_spmm_cs_op(payload: jax.Array, w: jax.Array, bitmap: jax.Array,
                      bs: int = 8, bc: int = 128, stm: int | None = None,
-                     stk: int | None = None, interpret: bool = True):
+                     stk: int | None = None,
+                     caps: tuple[int, ...] | None = None,
+                     zero_frac_hint: float | None = None,
+                     scheduled: bool | None = None, interpret: bool = True):
     """Compressed-stream consumer: payload x (K, N) -> (M, N) fp32."""
     return zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, stm=stm, stk=stk,
-                         interpret=interpret)
+                         caps=caps, zero_frac_hint=zero_frac_hint,
+                         scheduled=scheduled, interpret=interpret)
 
 
 def zebra_ffn_hidden(x: jax.Array, w_out: jax.Array, t_obj: float,

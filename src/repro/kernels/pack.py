@@ -2,21 +2,28 @@
 
 ``zebra_pack`` compacts the *surviving* ``(bs, bc)`` blocks of a
 Zebra-masked ``(M, K)`` map into a dense payload — live blocks first, in
-row-major block order — so the accelerator moves only
-``n_live * bs * bc * itemsize`` payload bytes plus the 1-bit-per-block
-index (paper Eq. 2/3) instead of the full map. ``zebra_unpack`` is the
-exact inverse. Stream format: README.md §Compressed activation transport.
+the **GEMM-consumable consumer order** of ``kernels.schedule`` (grouped
+by K-block column, columns ascending, rows ascending within a column) —
+so the accelerator moves only ``n_live * bs * bc * itemsize`` payload
+bytes plus the 1-bit-per-block index (paper Eq. 2/3) instead of the full
+map, AND the downstream GEMM reads each K column's operand as one
+contiguous slot run with zero dynamic-window gathers on its hot path.
+``zebra_unpack`` is the exact inverse. Stream format: README.md
+§Compressed activation transport.
 
 Because JAX shapes are static, the payload buffer is allocated at the
 worst case (``n_blocks`` slots); the *measured* stream length is
-``n_live`` slots and everything past it is zeroed. Compaction runs as a
-scatter through the output BlockSpec index_map: block ``g``'s destination
-slot is the exclusive prefix sum of the keep flags (scalar-prefetched in
-SMEM). Dead blocks write to the slot the *next* live block also maps to,
-so the sequential TPU grid makes the live block's write win — the dual of
-zebra_spmm's revolving-door read trick. Visits to each output slot are a
-single contiguous run of grid steps (the prefix sum is monotone), which
-is what the TPU output-revisiting rule requires.
+``n_live`` slots and everything past it is zeroed (slot order cannot
+change the stream length). Compaction runs as a scatter through the
+output BlockSpec index_map: block ``(r, k)``'s destination slot is
+``schedule.slot_map``'s consumer-order prefix sum (scalar-prefetched in
+SMEM). The grid iterates **K-block columns outermost** so the slot map
+stays monotone along the traversal: dead blocks write to the slot the
+*next* live block of their column also maps to, and the sequential TPU
+grid makes the live block's write win — the dual of the consumers'
+revolving-door read trick. Visits to each output slot remain a single
+contiguous run of grid steps, which is what the TPU output-revisiting
+rule requires.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .schedule import slot_map
 from .supertile import gather_supertiles, validate_supertile
 
 
@@ -56,9 +64,10 @@ def _unpack_kernel(smap_ref, keep_ref, *refs, R: int, C: int, bs: int,
 
 
 def _prefix(bitmap: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """keep flags + exclusive prefix sum (the block -> payload-slot map)."""
-    keep = bitmap.reshape(-1).astype(jnp.int32)
-    return keep, (jnp.cumsum(keep) - keep).astype(jnp.int32)
+    """keep flags + the consumer-order block -> payload-slot map (THE one
+    slot map, from kernels.schedule — producer, expander and consumers
+    all address the stream through it)."""
+    return slot_map(bitmap)
 
 
 def expand_payload(payload: jax.Array, keep: jax.Array, smap: jax.Array,
@@ -81,8 +90,9 @@ def zebra_pack(x: jax.Array, bitmap: jax.Array, *, bs: int = 8, bc: int = 128,
                interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """Compact live blocks of a masked (M, K) map.
 
-    Returns (payload (n_blocks, bs, bc) — live blocks first, zero tail —
-    and n_live () int32).
+    Returns (payload (n_blocks, bs, bc) — live blocks first in consumer
+    order (column-grouped; kernels.schedule), zero tail — and n_live ()
+    int32).
     """
     M, K = x.shape
     if M % bs or K % bc:
@@ -93,16 +103,20 @@ def zebra_pack(x: jax.Array, bitmap: jax.Array, *, bs: int = 8, bc: int = 128,
     keep, dmap = _prefix(bitmap)
     n_live = jnp.sum(keep)
 
+    # K-block column outermost: the consumer-order slot map is monotone
+    # along this traversal (ascending within each column's run), which the
+    # scatter-through-BlockSpec output-revisiting trick requires.
     payload = pl.pallas_call(
         _pack_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(nm, nk),
+            grid=(nk, nm),
             in_specs=[
-                pl.BlockSpec((bs, bc), lambda i, j, dmap, keep: (i, j)),
+                pl.BlockSpec((bs, bc), lambda kc, i, dmap, keep: (i, kc)),
             ],
             out_specs=pl.BlockSpec(
-                (1, bs, bc), lambda i, j, dmap, keep: (dmap[i * nk + j], 0, 0)),
+                (1, bs, bc),
+                lambda kc, i, dmap, keep: (dmap[i * nk + kc], 0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((nb, bs, bc), x.dtype),
         interpret=interpret,

@@ -55,27 +55,40 @@ def _from_blocks(blocks: jax.Array, nm: int, nk: int) -> jax.Array:
 
 def zebra_pack_ref(x: jax.Array, bitmap: jax.Array, bs: int, bc: int
                    ) -> tuple[jax.Array, jax.Array]:
-    """Compaction oracle: live (bs, bc) blocks first (row-major block order),
-    zeroed tail. Returns (payload (n_blocks, bs, bc), n_live () int32)."""
-    blocks = _to_blocks(x, bs, bc)
+    """Compaction oracle: live (bs, bc) blocks first in CONSUMER order —
+    grouped by K-block column, columns ascending, block rows ascending
+    within a column (the GEMM-consumable order of kernels.schedule) —
+    then a zeroed tail. Returns (payload (n_blocks, bs, bc), n_live ()
+    int32). Deliberately an independent realization (a stable argsort on
+    the (column, row) key), not the kernels' prefix-sum scatter."""
+    nm, nk = bitmap.shape
+    blocks = _to_blocks(x, bs, bc)                    # row-major block order
     keep = bitmap.reshape(-1).astype(jnp.int32)
     n_live = jnp.sum(keep)
-    order = jnp.argsort(1 - keep, stable=True)        # live first, stable
+    nb = nm * nk
+    g = jnp.arange(nb, dtype=jnp.int32)
+    r, k = g // nk, g % nk
+    sortkey = jnp.where(keep != 0, k * nm + r, nb * nm + g)   # dead: after
+    order = jnp.argsort(sortkey, stable=True)
     payload = blocks[order]
-    live_slot = jnp.arange(blocks.shape[0])[:, None, None] < n_live
+    live_slot = jnp.arange(nb)[:, None, None] < n_live
     payload = jnp.where(live_slot, payload, jnp.zeros((), x.dtype))
     return payload, n_live.astype(jnp.int32)
 
 
 def zebra_unpack_ref(payload: jax.Array, bitmap: jax.Array, bs: int, bc: int
                      ) -> jax.Array:
-    """Inverse of zebra_pack_ref: scatter payload slots back to (M, K).
-    Dead blocks are where-gated (not multiplied) to exact +0, matching
-    the kernels — a dead block's slot aliases a live block, and * would
-    leak NaN/Inf from it."""
+    """Inverse of zebra_pack_ref: scatter consumer-order payload slots
+    back to (M, K). Dead blocks are where-gated (not multiplied) to
+    exact +0, matching the kernels — a dead block's slot aliases a live
+    block, and * would leak NaN/Inf from it."""
     nm, nk = bitmap.shape
-    keep = bitmap.reshape(-1).astype(jnp.int32)
-    src = jnp.cumsum(keep) - keep                     # exclusive prefix sum
+    keep2 = bitmap.astype(jnp.int32)                  # (nm, nk)
+    counts = keep2.sum(axis=0)
+    offsets = jnp.cumsum(counts) - counts             # column slot runs
+    colrank = jnp.cumsum(keep2, axis=0) - keep2
+    src = (offsets[None, :] + colrank).reshape(-1)    # block -> slot
+    keep = keep2.reshape(-1)
     blocks = jnp.where((keep != 0)[:, None, None], payload[src],
                        jnp.zeros((), payload.dtype))
     return _from_blocks(blocks, nm, nk)

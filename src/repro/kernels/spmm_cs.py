@@ -1,31 +1,36 @@
 """Pallas TPU kernel: supertiled GEMM over the *compressed* Zebra stream.
 
 ``zebra_spmm_cs`` computes ``y = mask(x) @ w`` from the ``(payload,
-bitmap)`` stream that ``zebra_mask_pack`` produced. The bitmap's
-exclusive prefix sum is the block -> payload-slot map; accumulation
-order, supertile shapes and the in-kernel panel assembly are *identical*
-to ``zebra_spmm`` (the dense-input consumer), so the result is
-bitwise-equal to it — which is itself the reference masking + matmul.
+bitmap)`` stream that ``zebra_mask_pack`` produced. The payload follows
+the consumer order of ``kernels.schedule`` (column-grouped), so each K
+column's operand is ONE contiguous slot run — no dynamic-window gathers
+on the hot path. The consumer has three executable realizations of the
+one contract:
 
-Like the producer, the consumer has two executable realizations of the
-one contract, selected by ``payload_windows`` (default: the TPU form
-when ``interpret=False``):
-
-* **TPU form** (``payload_windows=True``): the grid steps over
-  ``(stm, stk)`` supertiles and every ``(bs, bc)`` block of the
-  supertile is fetched straight from its compacted payload slot through
-  its own scalar-prefetch-indexed BlockSpec — ``R·C`` windows per step.
-  A dead block's window replays the prefix-sum slot (the in-bounds
-  revolving-door re-use) and is zero-gated in-kernel, so dead K-blocks
-  cost no *new* HBM traffic and the dense map is never reconstructed.
-* **interpret form** (CPU containers): the same slot map drives one XLA
-  blocked gather that expands the payload back to the dense operand,
-  which then feeds the *same* supertiled GEMM kernel as ``zebra_spmm``
-  with plain aligned windows. Pallas's interpreter charges ~100 us per
-  dynamically-indexed window fetch and duplicates multi-spec operands
-  in the grid carry, so the gather is the faster realization of the
-  identical dataflow on CPU; numerics are unchanged because the kernel
-  re-gates every block by its keep flag either way.
+* **scheduled form** (``scheduled=True``; the default when
+  ``interpret=True``): the static prefetch schedule slices each
+  column's contiguous slot run at a ladder capacity from the cached
+  ``supertile.gemm_plan`` chooser and runs the batched panel GEMM +
+  selection-matmul assembly of ``kernels.schedule`` — the realization
+  that beats the dense matmul at the paper's operating point. It is
+  bitwise-equal to ``zebra_spmm``'s scheduled form by construction:
+  both feed the literal same ``_consume_at_cap`` with identical gated
+  operands (live block values are untouched by masking, so compacting
+  from the payload and from the dense map give the same arrays).
+* **TPU form** (``payload_windows=True``; default when
+  ``interpret=False``): the grid steps over ``(stm, stk)`` supertiles
+  and every ``(bs, bc)`` block of the supertile is fetched straight
+  from its consumer-order payload slot through its own
+  scalar-prefetch-indexed BlockSpec — ``R·C`` windows per step. A dead
+  block's window replays the prefix-sum slot (the in-bounds
+  revolving-door re-use) and is zero-gated in-kernel. Accumulation
+  order, supertile shapes and the in-kernel panel assembly are
+  *identical* to ``zebra_spmm``'s kernel form (shared
+  ``gemm_supertile_body``), so the two kernel forms are bitwise-equal.
+* **expand form** (``scheduled=False, payload_windows=False``): the
+  slot map drives one XLA blocked gather that expands the payload back
+  to the dense operand, which then feeds the same supertiled Pallas
+  GEMM — kept as the bitwise cross-check of the TPU form on CPU.
 """
 from __future__ import annotations
 
@@ -37,7 +42,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..utils import cdiv
-from .supertile import gemm_supertiles, validate_supertile
+from .schedule import consumer_schedule, scheduled_consume
+from .supertile import gemm_plan, validate_supertile
 from .zebra_spmm import (gemm_supertile_body, launch_supertile_gemm,
                          seg_live)
 
@@ -94,18 +100,26 @@ def _payload_window_launch(payload, w, keep, smap, *, bs, bc, stm, stk, bn,
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "stm", "stk",
-                                             "payload_windows", "interpret"))
+                                             "caps", "zero_frac_hint",
+                                             "scheduled", "payload_windows",
+                                             "interpret"))
 def zebra_spmm_cs(payload: jax.Array, w: jax.Array, bitmap: jax.Array, *,
                   bs: int = 8, bc: int = 128, bn: int | None = None,
                   stm: int | None = None, stk: int | None = None,
+                  caps: tuple[int, ...] | None = None,
+                  zero_frac_hint: float | None = None,
+                  scheduled: bool | None = None,
                   payload_windows: bool | None = None,
                   interpret: bool = True) -> jax.Array:
     """(n_blocks, bs, bc) payload x (K, N) weight -> (M, N) fp32.
 
-    ``bitmap`` is the (M//bs, K//bc) keep map; payload slots follow
-    ``zebra_mask_pack``'s row-major live-first order. Supertiles default
-    to the same chooser as ``zebra_spmm`` — the two must tile alike for
-    their bitwise parity to hold.
+    ``bitmap`` is the (M//bs, K//bc) keep map; payload slots follow the
+    consumer order of ``kernels.schedule`` (``zebra_mask_pack``'s
+    emission order). Plans default from the same cached chooser as
+    ``zebra_spmm`` — the two must tile alike for their bitwise parity
+    to hold. ``scheduled=None`` picks the scheduled XLA form iff
+    ``interpret``; ``payload_windows`` selects between the two Pallas
+    kernel-form realizations when ``scheduled`` is off.
     """
     nm, nk = bitmap.shape
     K, N = w.shape
@@ -114,14 +128,24 @@ def zebra_spmm_cs(payload: jax.Array, w: jax.Array, bitmap: jax.Array, *,
     if payload.shape != (nm * nk, bs, bc):
         raise ValueError(f"payload {payload.shape} != ({nm * nk}, {bs}, {bc})")
     M = nm * bs
-    dstm, dstk, dbn = gemm_supertiles(M, K, N, bs, bc,
-                                      jnp.dtype(payload.dtype).itemsize)
-    stm, stk, bn = stm or dstm, stk or dstk, min(bn or dbn, N)
+    plan = gemm_plan(M, K, N, bs, bc, jnp.dtype(payload.dtype).itemsize,
+                     zero_frac=zero_frac_hint)
+    stm, stk, bn = stm or plan.stm, stk or plan.stk, min(bn or plan.bn, N)
     validate_supertile(M, K, bs, bc, stm, stk)
+    if scheduled is None:
+        # explicit payload_windows (either value) asks for a kernel-form
+        # realization; otherwise interpret picks the scheduled XLA form
+        scheduled = interpret and payload_windows is None
+    if scheduled:
+        sched = consumer_schedule(bitmap)
+        return scheduled_consume(payload, w, sched, caps or plan.caps,
+                                 from_payload=True, nm=nm, nk=nk,
+                                 bs=bs, bc=bc)
     if payload_windows is None:
         payload_windows = not interpret
-    keep = bitmap.reshape(-1).astype(jnp.int32)
-    smap = (jnp.cumsum(keep) - keep).astype(jnp.int32)   # block -> slot
+    sched = consumer_schedule(bitmap)
+    keep = sched.keep.reshape(-1)
+    smap = sched.slot.reshape(-1).astype(jnp.int32)      # block -> slot
 
     if payload_windows:
         return _payload_window_launch(payload, w, keep, smap, bs=bs, bc=bc,

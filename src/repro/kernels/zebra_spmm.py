@@ -29,6 +29,27 @@ Skip machinery, now at two granularities:
 Accumulation: fp32 VMEM scratch, K innermost, ``C`` sequential panel
 dots per step in ascending K order — the same per-row summation order
 for every legal supertile choice, so retiling does not move the result.
+
+Two executable realizations of the one contract, selected by
+``scheduled`` (default: the scheduled XLA form when ``interpret=True``):
+
+* **scheduled form** (CPU containers / XLA): the static prefetch
+  schedule of ``kernels.schedule`` compacts each K column's live blocks
+  to a ladder capacity from the cached ``supertile.gemm_plan`` chooser
+  and runs one batched panel GEMM + selection-matmul assembly — the
+  realization that actually beats the dense matmul at the paper's
+  operating point (BENCH_kernels.json ``speedup_vs_dense``). Bitwise
+  equal to ``zebra_spmm_cs``'s scheduled form by construction (same
+  ``_consume_at_cap``, identical gated operands).
+* **kernel form** (``scheduled=False``, the TPU form): the supertiled
+  Pallas GEMM below, bitwise-equal to ``zebra_spmm_cs``'s
+  payload-window form via the shared ``gemm_supertile_body``.
+
+The two forms sum partial products in different orders (sequential
+panel accumulate vs batched GEMM + selection matmul), so cross-form
+parity is allclose-tight, not bitwise; *within* each form the dense and
+compressed consumers are bitwise-equal, which is the contract the
+acceptance tests pin.
 """
 from __future__ import annotations
 
@@ -40,7 +61,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..utils import cdiv
-from .supertile import gemm_supertiles, validate_supertile
+from .schedule import consumer_schedule, scheduled_consume
+from .supertile import gemm_plan, validate_supertile
 
 
 def gemm_supertile_body(keep_ref, seg_ref, get_block, w_ref, y_ref, acc_ref,
@@ -145,23 +167,36 @@ def launch_supertile_gemm(x2: jax.Array, w: jax.Array, keep: jax.Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "bc", "bn", "stm", "stk",
-                                             "interpret"))
+                                             "caps", "zero_frac_hint",
+                                             "scheduled", "interpret"))
 def zebra_spmm(x: jax.Array, w: jax.Array, bitmap: jax.Array, *,
                bs: int = 8, bc: int = 128, bn: int | None = None,
                stm: int | None = None, stk: int | None = None,
+               caps: tuple[int, ...] | None = None,
+               zero_frac_hint: float | None = None,
+               scheduled: bool | None = None,
                interpret: bool = True) -> jax.Array:
     """(M,K) x (K,N) with (M//bs, K//bc) keep-bitmap -> (M,N) fp32.
 
-    ``stm``/``stk``/``bn`` are the GEMM supertile (defaults from the
-    module chooser under the default VMEM budget; the engine passes
-    ``ZebraConfig.tiles_for(..., kind="gemm")`` tiles explicitly)."""
+    ``stm``/``stk``/``bn`` size the kernel-form GEMM supertile and
+    ``caps`` the scheduled form's capacity ladder — both default from
+    the cached ``supertile.gemm_plan`` chooser (``zero_frac_hint``
+    tightens the ladder; the engine threads its config hint through).
+    ``scheduled=None`` picks the scheduled XLA form iff ``interpret``."""
     M, K = x.shape
     K2, N = w.shape
     assert K2 == K and bitmap.shape == (M // bs, K // bc), (bitmap.shape, M, K)
-    dstm, dstk, dbn = gemm_supertiles(M, K, N, bs, bc,
-                                      jnp.dtype(x.dtype).itemsize)
-    stm, stk, bn = stm or dstm, stk or dstk, min(bn or dbn, N)
+    plan = gemm_plan(M, K, N, bs, bc, jnp.dtype(x.dtype).itemsize,
+                     zero_frac=zero_frac_hint)
+    stm, stk, bn = stm or plan.stm, stk or plan.stk, min(bn or plan.bn, N)
     validate_supertile(M, K, bs, bc, stm, stk)
+    if scheduled is None:
+        scheduled = interpret
+    if scheduled:
+        sched = consumer_schedule(bitmap)
+        return scheduled_consume(x, w, sched, caps or plan.caps,
+                                 from_payload=False, nm=M // bs, nk=K // bc,
+                                 bs=bs, bc=bc)
     keep = bitmap.reshape(-1).astype(jnp.int32)
     return launch_supertile_gemm(x, w, keep, bs=bs, bc=bc, stm=stm, stk=stk,
                                  bn=bn, interpret=interpret)

@@ -79,17 +79,20 @@ def test_kernel_matches_oracle():
 
 
 def test_payload_is_live_blocks_in_order():
-    """Stream layout contract: payload slot r holds the r-th live block in
-    row-major block order; the tail is zero."""
+    """Stream layout contract: live slots come first in CONSUMER order —
+    grouped by K-block column, columns ascending, rows ascending within
+    a column (kernels.schedule) — and the tail is zero. Block (2,0) is
+    in column 0, so it precedes block (0,1) even though it comes later
+    in row-major order."""
     bs, bc = 8, 128
     x = jnp.zeros((24, 256), jnp.float32)
-    x = x.at[:8, 128:].set(1.0)      # block (0,1) -> slot 0
-    x = x.at[16:, :128].set(2.0)     # block (2,0) -> slot 1
+    x = x.at[:8, 128:].set(1.0)      # block (0,1): column 1 -> slot 1
+    x = x.at[16:, :128].set(2.0)     # block (2,0): column 0 -> slot 0
     bm = nonzero_bitmap(x, bs, bc)
     p, nl = zebra_pack_op(x, bm)
     assert int(nl) == 2
-    np.testing.assert_array_equal(np.asarray(p[0]), np.ones((bs, bc)))
-    np.testing.assert_array_equal(np.asarray(p[1]), 2 * np.ones((bs, bc)))
+    np.testing.assert_array_equal(np.asarray(p[0]), 2 * np.ones((bs, bc)))
+    np.testing.assert_array_equal(np.asarray(p[1]), np.ones((bs, bc)))
     np.testing.assert_array_equal(np.asarray(p[2:]), 0.0)
 
 

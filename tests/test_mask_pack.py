@@ -260,7 +260,7 @@ def test_supertiled_grids_shrink_by_supertile_factor():
     assert factor > 1
     w = jax.random.normal(jax.random.PRNGKey(3), (Kd, N), jnp.float32)
     fn = lambda p: zebra_spmm_cs(p, w, bm, bs=bs, bc=bc, bn=bn,
-                                 stm=stm, stk=stk)
+                                 stm=stm, stk=stk, scheduled=False)
     (grid,) = _grids(jax.make_jaxpr(fn)(payload).jaxpr)
     per_block = nm * ((N + bn - 1) // bn) * nk
     assert int(np.prod(grid)) * factor == per_block, (grid, factor)
@@ -313,3 +313,78 @@ def test_tpu_forms_match_interpret_forms_bitwise():
     np.testing.assert_array_equal(
         np.asarray(zebra_unpack(p1, b1, payload_windows=True)),
         np.asarray(zebra_unpack(p1, b1, payload_windows=False)))
+    # the scheduled XLA form is the same contract at allclose tightness
+    # (it sums partial products in a different order than the kernel
+    # forms), and its dense/compressed consumers stay bitwise-equal
+    from repro.kernels.zebra_spmm import zebra_spmm
+    from repro.kernels.zebra_mask import zebra_mask
+    y_sched = zebra_spmm_cs(p1, w, b1, scheduled=True)
+    np.testing.assert_allclose(
+        np.asarray(y_sched),
+        np.asarray(zebra_spmm_cs(p1, w, b1, payload_windows=False)),
+        rtol=1e-5, atol=1e-4)
+    y_m, _ = zebra_mask(x, t_obj=0.5)
+    np.testing.assert_array_equal(
+        np.asarray(y_sched),
+        np.asarray(zebra_spmm(y_m, w, b1, scheduled=True)))
+
+
+# ---------------------------------------------------------------------------
+# Consumer-order payload contract (the GEMM-consumable supertile order)
+# ---------------------------------------------------------------------------
+
+def test_payload_follows_consumer_order_and_stream_bytes_invariant():
+    """The producer emits payload slots grouped by K-block column
+    (columns ascending, block rows ascending within a column, zero
+    tail), each column's live blocks one contiguous slot run — and the
+    reorder is free: stream_bytes depends only on n_live, so it is
+    identical to what the legacy row-major live-first order measured."""
+    from repro.core.engine import stream_bytes
+    from repro.kernels.mask_pack import zebra_mask_pack
+
+    bs, bc = 8, 128
+    M, Kd = 64, 512
+    nm, nk = M // bs, Kd // bc
+    x = _blocky(K, M, Kd, bs, bc)
+    payload, bm, n_live = zebra_mask_pack(x, t_obj=0.5, bs=bs, bc=bc)
+    keep = np.asarray(bm, np.int32)
+    assert 0 < int(n_live) < nm * nk            # a mixed map, or no test
+
+    xb = np.asarray(x).reshape(nm, bs, nk, bc)
+    p = np.asarray(payload)
+    slot = 0
+    for k in range(nk):                          # columns ascending
+        for r in range(nm):                      # rows ascending within
+            if keep[r, k]:
+                np.testing.assert_array_equal(p[slot], xb[r, :, k, :])
+                slot += 1
+    assert slot == int(n_live)
+    assert not np.any(p[slot:])                  # zero tail
+
+    # stream_bytes is order-invariant: any permutation of the live slots
+    # (e.g. the legacy row-major live-first order) measures the same
+    sb = stream_bytes(n_live, bs, bc, x.dtype, nm * nk)
+    expected = int(n_live) * bs * bc * 4 + (nm * nk + 7) // 8
+    assert int(sb) == expected
+
+
+def test_scheduled_consumer_gates_dead_blocks():
+    """Scheduled-form consumers never read dead blocks: an Inf planted in
+    a dead block of the *raw* operand must not reach the output."""
+    from repro.kernels.zebra_mask import zebra_mask
+    from repro.kernels.zebra_spmm import zebra_spmm
+
+    bs, bc = 8, 128
+    x = _blocky(K, 64, 512, bs, bc)
+    _, bm = zebra_mask(x, t_obj=2.0, bs=bs, bc=bc)
+    keep = np.asarray(bm)
+    dead = np.argwhere(keep == 0)
+    assert dead.size and keep.any(), "need a mixed live/dead map"
+    r, c = dead[0]
+    x_poison = np.asarray(x).copy()
+    x_poison[r * bs:(r + 1) * bs, c * bc:(c + 1) * bc] = np.inf
+    w = jax.random.normal(jax.random.PRNGKey(7), (512, 64), jnp.float32)
+    y = np.asarray(zebra_spmm(jnp.asarray(x_poison), w, bm, scheduled=True))
+    assert np.isfinite(y).all()
+    np.testing.assert_array_equal(
+        y, np.asarray(zebra_spmm(x, w, bm, scheduled=True)))

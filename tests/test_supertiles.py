@@ -135,6 +135,43 @@ def test_explicit_ragged_supertile_raises():
         zebra_spmm_op(x, w, bm, bs=bs, bc=bc, stm=12)      # not bs-aligned
 
 
+def test_gemm_plan_cache_hit_miss_and_ladder():
+    """The cached autotuning chooser: same key -> cache hit, a zero_frac
+    hint in a new 1/16 bucket -> miss, same bucket -> hit; the hint
+    tightens the capacity ladder without touching the Pallas supertile;
+    tiles_for(kind='gemm') routes through the same cache."""
+    st.plan_cache_clear()
+    args = (256, 1024, 512, 8, 128, 4)
+    p1 = st.gemm_plan(*args)
+    assert st.plan_cache_info() == {"hits": 0, "misses": 1, "size": 1}
+    assert st.gemm_plan(*args) is p1
+    assert st.plan_cache_info()["hits"] == 1
+
+    p_hint = st.gemm_plan(*args, zero_frac=0.64)     # new bucket -> miss
+    assert st.plan_cache_info()["misses"] == 2
+    assert st.gemm_plan(*args, zero_frac=0.63) is p_hint   # same 1/16 bucket
+    assert st.plan_cache_info()["hits"] == 2
+
+    # the hint only tightens the ladder — kernel-form supertile unchanged
+    assert (p_hint.stm, p_hint.stk, p_hint.bn) == (p1.stm, p1.stk, p1.bn)
+    nm = 256 // 8
+    for plan in (p1, p_hint):
+        assert plan.caps == tuple(sorted(set(plan.caps)))  # sorted, unique
+        assert plan.caps[-1] == nm                 # all-live fallback rung
+        assert all(1 <= c <= nm for c in plan.caps)
+    # rungs inserted near the expected live count (~0.36 * 32 ~ 12)
+    expected = (1 - 0.64) * nm
+    assert any(expected <= c <= expected + 2 * max(1, nm // 16)
+               for c in p_hint.caps)
+
+    # ZebraConfig.tiles_for(kind="gemm") is the same cached chooser
+    cfg = ZebraConfig()                            # default budget == chooser's
+    hits = st.plan_cache_info()["hits"]
+    assert cfg.tiles_for(256, 1024, 8, 128, jnp.float32, kind="gemm",
+                         n=512) == (p1.stm, p1.stk, p1.bn)
+    assert st.plan_cache_info()["hits"] == hits + 1
+
+
 def test_vmem_bounded_backend_degrades_over_budget():
     """A registered backend declaring vmem_bounded really is gated by the
     engine: maps over vmem_budget_bytes degrade to reference with the
