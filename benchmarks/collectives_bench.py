@@ -1,0 +1,227 @@
+"""Compressed-collectives benchmark — BENCH_collectives.json.
+
+Per mesh axis of an 8-device forced-host mesh (2 "data" x 4 "model"),
+times and byte-accounts the three compressed collectives of
+``repro.distributed.collectives`` against their dense counterparts at
+the paper's ~64%-zero-blocks operating point:
+
+  collectives/all_gather.<axis>.{compressed,dense}
+  collectives/psum_stream.<axis>.{compressed,dense}
+  collectives/reduce_scatter.<axis>.{compressed,dense}
+
+Byte columns (the CI gate's exact contract, ``scripts/bench_gate.py``):
+
+  ici_bytes            int — bytes moved over ALL inbound links of the
+                       axis for one collective (sum across the n shards'
+                       links; compressed = live stream form)
+  ici_dense_bytes      int — dense-equivalent bytes over the same links
+  ici_predicted_bytes  int — the Eq. 2/3 analytic prediction computed
+                       host-side from the known per-shard bitmaps; the
+                       gate enforces ici_bytes == ici_predicted_bytes
+                       EXACTLY and ici_bytes < ici_dense_bytes on every
+                       compressed row
+
+The bench also asserts correctness in-line: the compressed all-gather is
+bitwise-equal to ``lax.all_gather`` of the dense masked shards, and the
+payload-form psum matches ``lax.psum`` bitwise on integer-valued data
+(same-order summation guarantee).
+
+Standalone on purpose (NOT in ``benchmarks/run.py``'s smoke list): the
+8-device host platform must be forced via XLA_FLAGS before jax imports,
+which a shared bench runner cannot guarantee. ``scripts/ci.sh`` runs it
+as its own shard.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}".strip()
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, set_json_dir, timeit
+from repro.distributed import collectives as coll
+from repro.launch.mesh import _make_mesh
+
+# one per-device shard: (M, K) f32 map in (bs, bc) = (8, 128) blocks
+M, K, BS, BC = 256, 1024, 8, 128
+NM, NK = M // BS, K // BC
+NB = NM * NK
+ITEM = 4
+ZERO_FRAC = 0.64            # the paper's operating point
+
+
+def _stream(n_live: int) -> int:
+    """Eq. 2/3 byte rule for one shard map (core.engine.stream_bytes)."""
+    return n_live * BS * BC * ITEM + (NB + 7) // 8
+
+
+def _make_shards(n: int, seed: int) -> np.ndarray:
+    """(n, M, K) integer-valued f32 shards with ~ZERO_FRAC zero blocks
+    (integer values: the ring psum's accumulation order then matches
+    lax.psum bitwise)."""
+    rng = np.random.default_rng(seed)
+    keep = (rng.random((n, NM, NK)) > ZERO_FRAC).astype(np.float32)
+    vals = rng.integers(-8, 9, size=(n, M, K)).astype(np.float32)
+    mask = np.repeat(np.repeat(keep, BS, axis=1), BC, axis=2)
+    return vals * mask
+
+
+def _bench_axis(mesh, axis: str, n: int, iters: int) -> list[dict]:
+    # fixed per-axis seeds: the byte columns are bit-exact gate contracts,
+    # so the drawn bitmaps must be identical run to run
+    shards = _make_shards(n, seed={"model": 7, "data": 11}[axis])
+    live = [int((np.abs(shards[s]).reshape(NM, BS, NK, BC)
+                 .max(axis=(1, 3)) > 0).sum()) for s in range(n)]
+    zf = 1.0 - sum(live) / (n * NB)
+    X = jnp.asarray(shards.reshape(n * M, K))
+    in_spec = P(axis, None)
+    sm = functools.partial(coll.shard_map_compat, mesh=mesh,
+                           in_specs=(in_spec,))
+
+    def tot(v):          # replicated total over the axis's inbound links
+        return lax.psum(jnp.asarray(v).astype(jnp.int32), axis)
+
+    # ---- all_gather ----
+    def ag_comp(x):
+        y, link = coll.zebra_all_gather(x, axis, bs=BS, bc=BC, tiled=True)
+        return y, tot(link.moved), tot(link.dense)
+
+    def ag_dense(x):
+        return lax.all_gather(x, axis, axis=0, tiled=True)
+
+    f_comp = jax.jit(sm(ag_comp, out_specs=(P(), P(), P())))
+    f_dense = jax.jit(sm(ag_dense, out_specs=P()))
+    y_c, moved, dense = f_comp(X)
+    y_d = f_dense(X)
+    np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_d))
+    np.testing.assert_array_equal(np.asarray(y_d), np.asarray(X))
+    pred = (n - 1) * sum(_stream(lv) for lv in live)
+    rows = [
+        {"name": f"collectives/all_gather.{axis}.compressed",
+         "us_per_call": timeit(f_comp, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": int(moved), "ici_dense_bytes": int(dense),
+         "ici_predicted_bytes": pred},
+        {"name": f"collectives/all_gather.{axis}.dense",
+         "us_per_call": timeit(f_dense, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": n * (n - 1) * M * K * ITEM,
+         "ici_dense_bytes": n * (n - 1) * M * K * ITEM,
+         "ici_predicted_bytes": n * (n - 1) * M * K * ITEM},
+    ]
+    assert int(moved) == pred, (int(moved), pred)
+    assert int(moved) < int(dense), (int(moved), int(dense))
+
+    # ---- psum_stream ----
+    union = (np.abs(shards).reshape(n, NM, BS, NK, BC).max(axis=(2, 4))
+             > 0).any(axis=0)
+    u_live = int(union.sum())
+
+    def ps_comp(x):
+        y, _, link = coll.zebra_psum_stream(x, axis, bs=BS, bc=BC)
+        return y, tot(link.moved), tot(link.dense)
+
+    def ps_dense(x):
+        return lax.psum(x, axis)
+
+    f_comp = jax.jit(sm(ps_comp, out_specs=(in_spec, P(), P())))
+    f_dense = jax.jit(sm(ps_dense, out_specs=in_spec))
+    y_c, moved, dense = f_comp(X)
+    y_d = f_dense(X)
+    np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_d))
+    pred = n * (n - 1) * _stream(u_live)
+    rows += [
+        {"name": f"collectives/psum_stream.{axis}.compressed",
+         "us_per_call": timeit(f_comp, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": int(moved), "ici_dense_bytes": int(dense),
+         "ici_predicted_bytes": pred},
+        {"name": f"collectives/psum_stream.{axis}.dense",
+         "us_per_call": timeit(f_dense, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": n * (n - 1) * M * K * ITEM,
+         "ici_dense_bytes": n * (n - 1) * M * K * ITEM,
+         "ici_predicted_bytes": n * (n - 1) * M * K * ITEM},
+    ]
+    assert int(moved) == pred, (int(moved), pred)
+    assert int(moved) < int(dense), (int(moved), int(dense))
+
+    # ---- reduce_scatter ----
+    Ml = M // n
+    chunk_live = [int(union.reshape(n, (Ml // BS), NK)[c].sum())
+                  for c in range(n)]
+
+    def rs_comp(x):
+        y, link = coll.zebra_reduce_scatter(x, axis, bs=BS, bc=BC)
+        return y, tot(link.moved), tot(link.dense)
+
+    def rs_dense(x):
+        return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+
+    out_rows = P(axis, None)
+    f_comp = jax.jit(sm(rs_comp, out_specs=(out_rows, P(), P())))
+    f_dense = jax.jit(sm(rs_dense, out_specs=out_rows))
+    y_c, moved, dense = f_comp(X)
+    y_d = f_dense(X)
+    np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_d))
+
+    def _chunk_stream(lv):
+        return lv * BS * BC * ITEM + ((Ml // BS) * NK + 7) // 8
+
+    pred = (n - 1) * sum(_chunk_stream(lv) for lv in chunk_live)
+    rows += [
+        {"name": f"collectives/reduce_scatter.{axis}.compressed",
+         "us_per_call": timeit(f_comp, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": int(moved), "ici_dense_bytes": int(dense),
+         "ici_predicted_bytes": pred},
+        {"name": f"collectives/reduce_scatter.{axis}.dense",
+         "us_per_call": timeit(f_dense, X, iters=iters),
+         "axis": axis, "n_shards": n, "zero_frac": round(zf, 4),
+         "ici_bytes": n * (n - 1) * Ml * K * ITEM,
+         "ici_dense_bytes": n * (n - 1) * Ml * K * ITEM,
+         "ici_predicted_bytes": n * (n - 1) * Ml * K * ITEM},
+    ]
+    assert int(moved) == pred, (int(moved), pred)
+    assert int(moved) < int(dense), (int(moved), int(dense))
+    return rows
+
+
+def run(iters: int = 5) -> list[dict]:
+    if len(jax.devices()) < 8:
+        raise SystemExit(
+            "collectives_bench needs 8 host devices; jax was imported "
+            "before XLA_FLAGS could force them — run this module "
+            "standalone (python -m benchmarks.collectives_bench)")
+    mesh = _make_mesh((2, 4), ("data", "model"))
+    rows = []
+    for axis, n in (("model", 4), ("data", 2)):
+        rows += _bench_axis(mesh, axis, n, iters)
+    emit(rows, "collectives")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing iters (CI shard)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_collectives.json to the CWD")
+    args = ap.parse_args()
+    if args.json:
+        set_json_dir(os.getcwd())
+    run(iters=3 if args.smoke else 10)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,12 +28,15 @@ exact-key comparison only applies to keys present on BOTH sides. None
 of these fail the gate; byte drift and latency regression on rows
 present in both always do.
 
-One absolute check rides on the fresh ``BENCH_kernels.json``
-independent of any baseline: the ``kernel/zebra_spmm`` and
-``kernel/spmm_cs.fused`` rows must report ``speedup_vs_dense > 1`` —
-the compressed consumer beating the dense matmul at the ~64%-zeros
+Two absolute checks ride on the fresh artifacts independent of any
+baseline: the ``kernel/zebra_spmm`` and ``kernel/spmm_cs.fused`` rows
+of ``BENCH_kernels.json`` must report ``speedup_vs_dense > 1`` — the
+compressed consumer beating the dense matmul at the ~64%-zeros
 operating point is the acceptance bar of the consumer rearchitecture,
-and a missing row/column is itself a failure.
+and a missing row/column is itself a failure — and every
+``*.compressed`` row of ``BENCH_collectives.json`` must report
+``ici_bytes == ici_predicted_bytes`` exactly (Eq. 2/3 carried onto the
+interconnect) with ``ici_bytes < ici_dense_bytes``.
 
 Usage:
     python scripts/bench_gate.py --baseline DIR --fresh DIR \
@@ -48,13 +51,20 @@ import json
 import os
 import sys
 
-FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json")
-EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes")
+FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json",
+         "BENCH_collectives.json")
+EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes",
+              "ici_bytes", "ici_dense_bytes", "ici_predicted_bytes")
 US_EXEMPT_BELOW = 50.0
 
 # rows of the fresh BENCH_kernels.json that must beat dense (the
 # consumer-rearchitecture acceptance bar; checked baseline or not)
 SPEEDUP_ROWS = ("kernel/zebra_spmm", "kernel/spmm_cs.fused")
+
+# NOTE on removed columns: the deprecated `speedup_vs_ref` alias on
+# kernel/zebra_spmm is gone from fresh runs. Old baselines still carrying
+# it are tolerated automatically — it was never an EXACT_KEY, and exact
+# comparison only applies to keys present on BOTH sides.
 
 
 def _rows(path: str) -> dict[str, dict]:
@@ -131,6 +141,50 @@ def gate_speedup(fresh_path: str) -> list[str]:
     return errors
 
 
+def gate_collectives(fresh_path: str) -> list[str]:
+    """Absolute acceptance check on the fresh collectives artifact (no
+    baseline involvement): every compressed row's measured interconnect
+    bytes must equal the Eq. 2/3 analytic prediction EXACTLY (byte
+    accounting is a correctness observable), and must be strictly below
+    the dense-equivalent bytes — the paper's claim carried onto the wire
+    at the ~64%-zeros operating point. A missing artifact is fine (the
+    bench needs a forced 8-device mesh and may not have run); a present
+    artifact with no compressed rows is a failure."""
+    if not os.path.exists(fresh_path):
+        print("bench_gate: no fresh BENCH_collectives.json — skipping the "
+              "interconnect-byte acceptance check (multi-device shard "
+              "not run)")
+        return []
+    try:
+        fresh = _rows(fresh_path)
+    except (json.JSONDecodeError, KeyError):
+        return [f"{os.path.basename(fresh_path)}: unreadable — cannot check "
+                f"the interconnect-byte acceptance rows"]
+    errors = []
+    comp = {n: r for n, r in fresh.items() if n.endswith(".compressed")}
+    if not comp:
+        return [f"{os.path.basename(fresh_path)}: no *.compressed rows — "
+                f"the bench emitted nothing to accept"]
+    for name, r in sorted(comp.items()):
+        missing = [k for k in ("ici_bytes", "ici_dense_bytes",
+                               "ici_predicted_bytes") if k not in r]
+        if missing:
+            errors.append(f"{name}: byte columns missing: {missing}")
+            continue
+        moved, dense, pred = (int(r["ici_bytes"]), int(r["ici_dense_bytes"]),
+                              int(r["ici_predicted_bytes"]))
+        if moved != pred:
+            errors.append(
+                f"{name}: ici_bytes {moved} != predicted {pred} (Eq. 2/3 "
+                f"accounting is exact — stream-format bug, not noise)")
+        if not moved < dense:
+            errors.append(
+                f"{name}: ici_bytes {moved} >= dense {dense} — the "
+                f"compressed exchange moved no fewer bytes than dense at "
+                f"zero_frac {r.get('zero_frac', '?')}")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -174,6 +228,15 @@ def main() -> None:
     print(f"bench_gate: speedup_vs_dense > 1 on {list(SPEEDUP_ROWS)} -> "
           f"{'FAIL' if sp_errs else 'ok'}")
     all_errors.extend(sp_errs)
+
+    # absolute interconnect-byte acceptance (baseline-independent): the
+    # compressed collectives must match Eq. 2/3 exactly and beat dense
+    coll_path = os.path.join(args.fresh, "BENCH_collectives.json")
+    coll_errs = gate_collectives(coll_path)
+    if os.path.exists(coll_path):
+        print(f"bench_gate: BENCH_collectives.json ici_bytes == predicted "
+              f"and < dense -> {'FAIL' if coll_errs else 'ok'}")
+    all_errors.extend(coll_errs)
 
     if all_errors:
         print("\nbench_gate FAILED:", file=sys.stderr)

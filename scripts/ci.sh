@@ -12,7 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # trajectory, not ratchet against their own previous output. Falls back to
 # the working-tree copy outside a git checkout.
 mkdir -p .bench-baseline
-for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json; do
+for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json; do
     if ! git show "HEAD:$f" > ".bench-baseline/$f" 2>/dev/null; then
         # a failed `git show` leaves a truncated file — replace it with
         # the working-tree copy, or remove it so the gate's first-run
@@ -36,6 +36,44 @@ fi
 
 echo "== benchmarks (smoke: import-check all, run kernels/bandwidth/roofline/table5 at toy sizes + the 2-step train smoke on the pallas backend; emit BENCH_*.json) =="
 python -m benchmarks.run --smoke --json
+
+# -- multi-device shard: its own processes because the 8-device host
+# platform must be forced via XLA_FLAGS before jax imports (which the
+# shared bench runner and the tier-1 pytest process cannot guarantee)
+echo "== multi-device shard (8 forced host devices): collectives tests + bench =="
+python -m pytest -x -q tests/test_collectives.py tests/test_sharding_spec.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.collectives_bench --smoke --json
+
+echo "== BENCH_collectives.json schema + byte-contract columns =="
+python - <<'EOF'
+import json, sys
+try:
+    with open("BENCH_collectives.json") as f:
+        doc = json.load(f)
+except FileNotFoundError:
+    sys.exit("FAIL: BENCH_collectives.json missing (collectives_bench "
+             "--json did not write it)")
+except json.JSONDecodeError as e:
+    sys.exit(f"FAIL: BENCH_collectives.json is not valid JSON: {e}")
+for key in ("bench", "schema_version", "generated_unix", "rows"):
+    if key not in doc:
+        sys.exit(f"FAIL: BENCH_collectives.json missing key {key!r}")
+rows = doc["rows"]
+comp = [r for r in rows if r["name"].endswith(".compressed")]
+if not comp:
+    sys.exit("FAIL: BENCH_collectives.json has no *.compressed rows")
+for r in rows:
+    for k in ("name", "us_per_call", "axis", "ici_bytes", "ici_dense_bytes",
+              "ici_predicted_bytes"):
+        if k not in r:
+            sys.exit(f"FAIL: {r.get('name', '?')} missing column {k!r}")
+axes = {r["axis"] for r in rows}
+if axes != {"model", "data"}:
+    sys.exit(f"FAIL: expected per-axis rows for model AND data, got {axes}")
+print(f"  BENCH_collectives.json: {len(rows)} rows "
+      f"({len(comp)} compressed) across axes {sorted(axes)} OK")
+EOF
 
 echo "== BENCH_*.json perf-trajectory artifacts =="
 python - <<'EOF'

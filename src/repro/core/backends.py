@@ -47,6 +47,17 @@ Capabilities:
 ``grad_variant``
     Which ``kernels.grad`` forward variant implements this backend's
     trainable path (``"mask"`` | ``"stream"``; None = jnp autodiff).
+``comms``
+    How this backend's maps cross mesh axes in layer exchanges
+    (``distributed/collectives.py``). ``"compressed"`` declares that the
+    backend's payload contract extends to the interconnect: TP
+    layer-output / KV-shard gathers move the (bitmap, payload) stream
+    with per-link byte accounting instead of dense ``lax.all_gather``.
+    Only stream-emitting backends may declare it — the payload IS the
+    wire format, so a dense-map backend claiming compressed comms is a
+    registration error. ``None`` (reference/pallas): exchanges under a
+    comm context run dense with an explicit, logged degrade reason
+    (``resolve_comms``), never silently.
 
 Registering a new backend (say, a sharded one) is
 ``core.engine.register_engine_backend(spec, infer_impl)`` — no model
@@ -58,6 +69,7 @@ import dataclasses
 
 
 PAYLOAD_ORDERS = ("consumer",)
+COMM_MODES = ("compressed",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +81,7 @@ class BackendSpec:
     vmem_bounded: bool
     grad_variant: str | None = None
     payload_order: str | None = None
+    comms: str | None = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -89,6 +102,15 @@ def register_backend(spec: BackendSpec) -> BackendSpec:
         raise ValueError(
             f"backend {spec.name!r}: unknown payload_order "
             f"{spec.payload_order!r}; expected one of {PAYLOAD_ORDERS}")
+    if spec.comms is not None and spec.comms not in COMM_MODES:
+        raise ValueError(
+            f"backend {spec.name!r}: unknown comms mode {spec.comms!r}; "
+            f"expected one of {COMM_MODES}")
+    if spec.comms == "compressed" and not spec.emits_stream:
+        raise ValueError(
+            f"backend {spec.name!r}: comms='compressed' requires "
+            f"emits_stream=True — the (bitmap, payload) stream IS the wire "
+            f"format of the compressed collectives")
     _REGISTRY[spec.name] = spec
     return spec
 
@@ -123,7 +145,8 @@ register_backend(BackendSpec(
     vmem_bounded=False, grad_variant="mask"))
 register_backend(BackendSpec(
     "stream", trainable=True, emits_stream=True, consumes_w=False,
-    vmem_bounded=False, grad_variant="stream", payload_order="consumer"))
+    vmem_bounded=False, grad_variant="stream", payload_order="consumer",
+    comms="compressed"))
 register_backend(BackendSpec(
     "fused", trainable=False, emits_stream=True, consumes_w=True,
-    vmem_bounded=False, payload_order="consumer"))
+    vmem_bounded=False, payload_order="consumer", comms="compressed"))

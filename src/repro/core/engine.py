@@ -118,7 +118,16 @@ class SiteAux:
     ``thresholds``      train-mode threshold-net outputs (None otherwise).
     ``backend``         which backend actually executed (static). A
                         capability degrade is surfaced here as
-                        ``"reference(<reason>)"``.
+                        ``"reference(<reason>)"``; a degraded layer
+                        exchange appends ``"+dense-comms(<reason>)"``.
+    ``ici_bytes``       interconnect bytes this site's layer exchanges
+                        put on ONE inbound link (compressed stream on
+                        the compressed path, dense size on a degraded
+                        exchange); 0 outside a comm context. Attached by
+                        ``distributed.collectives.attach_link``.
+    ``ici_dense_bytes`` dense-equivalent per-link bytes of the same
+                        exchanges (the ``lax.all_gather`` baseline the
+                        compression is measured against).
 
     Supports dict-style access (``aux["zero_frac"]``, ``aux.get(...)``)
     so it is a drop-in for the legacy per-site aux dicts.
@@ -129,16 +138,20 @@ class SiteAux:
     n_blocks: Any = 0
     thresholds: Any = None
     backend: str = "reference"
+    ici_bytes: Any = 0
+    ici_dense_bytes: Any = 0
 
     def tree_flatten(self):
         return ((self.reg, self.zero_frac, self.measured_bytes,
-                 self.n_blocks, self.thresholds), (self.backend,))
+                 self.n_blocks, self.thresholds, self.ici_bytes,
+                 self.ici_dense_bytes), (self.backend,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        reg, zf, mb, nb, thr = children
+        reg, zf, mb, nb, thr, ici, icid = children
         return cls(reg=reg, zero_frac=zf, measured_bytes=mb, n_blocks=nb,
-                   thresholds=thr, backend=aux[0])
+                   thresholds=thr, backend=aux[0], ici_bytes=ici,
+                   ici_dense_bytes=icid)
 
     # legacy dict-style access (pre-engine aux shape)
     def __getitem__(self, key: str):
@@ -151,7 +164,8 @@ class SiteAux:
     def empty(cls, backend: str = "disabled") -> "SiteAux":
         return cls(reg=jnp.float32(0.0), zero_frac=jnp.float32(0.0),
                    measured_bytes=jnp.int32(0), n_blocks=0,
-                   thresholds=None, backend=backend)
+                   thresholds=None, backend=backend,
+                   ici_bytes=jnp.int32(0), ici_dense_bytes=jnp.int32(0))
 
 
 MB_BASE = 16777216             # 2**24 — f32 integers are exact below this
@@ -165,9 +179,12 @@ def add_byte_pair(hi_a, lo_a, hi_b, lo_b):
     their f32 SUM can land between representable values above 2**24 (odd
     sums round) — the carry must be extracted from an exact sum. The ONE
     carry rule; LayerAux.__add__ and the train-step microbatch
-    accumulator both use it."""
-    lo = lo_a.astype(jnp.int32) + lo_b.astype(jnp.int32)
-    hi = hi_a + hi_b + (lo // jnp.int32(MB_BASE)).astype(jnp.float32)
+    accumulator both use it. Inputs coerce through jnp.asarray so a
+    defaulted Python-float leg (e.g. LayerAux ici fields a constructor
+    left at 0.0) adds exactly like a jnp scalar."""
+    lo = jnp.asarray(lo_a).astype(jnp.int32) + jnp.asarray(lo_b).astype(jnp.int32)
+    hi = (jnp.asarray(hi_a, jnp.float32) + jnp.asarray(hi_b, jnp.float32)
+          + (lo // jnp.int32(MB_BASE)).astype(jnp.float32))
     return hi, (lo % jnp.int32(MB_BASE)).astype(jnp.float32)
 
 
@@ -188,6 +205,17 @@ class LayerAux:
     bytes; read it back with :meth:`measured_bytes_exact` (host) — the
     in-graph ``measured_bytes`` property is a display convenience that
     rounds above 16 MiB.
+
+    Interconnect bytes (``SiteAux.ici_bytes`` / ``ici_dense_bytes``,
+    attached by the compressed collectives) accumulate through the same
+    pair scheme — ``(ici_hi, ici_lo)`` for what layer exchanges actually
+    put on one inbound link, ``(ici_dense_hi, ici_dense_lo)`` for the
+    dense-equivalent baseline. They total across ALL exchanges a layer
+    ran; per-axis breakdown lives in ``compress.meter.BandwidthMeter``
+    link records (the axis is host-side metadata, not a carry). The
+    fields default to 0.0 so pre-existing constructors stay valid —
+    ``add_byte_pair`` coerces, and ``zero()``/``of_site`` produce jnp
+    scalars so scan carries keep a consistent pytree.
     """
     reg: jax.Array
     zf_blocks: jax.Array
@@ -195,10 +223,16 @@ class LayerAux:
     mb_hi: jax.Array
     mb_lo: jax.Array
     router_aux: jax.Array
+    ici_hi: Any = 0.0
+    ici_lo: Any = 0.0
+    ici_dense_hi: Any = 0.0
+    ici_dense_lo: Any = 0.0
 
     def tree_flatten(self):
         return ((self.reg, self.zf_blocks, self.n_blocks,
-                 self.mb_hi, self.mb_lo, self.router_aux), None)
+                 self.mb_hi, self.mb_lo, self.router_aux,
+                 self.ici_hi, self.ici_lo,
+                 self.ici_dense_hi, self.ici_dense_lo), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -207,28 +241,42 @@ class LayerAux:
     @classmethod
     def zero(cls) -> "LayerAux":
         z = jnp.float32(0.0)
-        return cls(z, z, z, z, z, z)
+        return cls(z, z, z, z, z, z, z, z, z, z)
 
     @classmethod
     def of_site(cls, site: SiteAux, router_aux=0.0) -> "LayerAux":
         nb = jnp.float32(site.n_blocks)
-        mb = jnp.asarray(site.measured_bytes).astype(jnp.int32)
         base = jnp.int32(_MB_BASE)
+
+        def pair(v):
+            v = jnp.asarray(v).astype(jnp.int32)
+            return ((v // base).astype(jnp.float32),
+                    (v % base).astype(jnp.float32))
+
+        mb_hi, mb_lo = pair(site.measured_bytes)
+        ici_hi, ici_lo = pair(site.ici_bytes)
+        icid_hi, icid_lo = pair(site.ici_dense_bytes)
         return cls(reg=jnp.float32(site.reg),
                    zf_blocks=jnp.float32(site.zero_frac) * nb,
                    n_blocks=nb,
-                   mb_hi=(mb // base).astype(jnp.float32),
-                   mb_lo=(mb % base).astype(jnp.float32),
-                   router_aux=jnp.float32(router_aux))
+                   mb_hi=mb_hi, mb_lo=mb_lo,
+                   router_aux=jnp.float32(router_aux),
+                   ici_hi=ici_hi, ici_lo=ici_lo,
+                   ici_dense_hi=icid_hi, ici_dense_lo=icid_lo)
 
     def __add__(self, other: "LayerAux") -> "LayerAux":
         hi, lo = add_byte_pair(self.mb_hi, self.mb_lo,
                                other.mb_hi, other.mb_lo)
+        ihi, ilo = add_byte_pair(self.ici_hi, self.ici_lo,
+                                 other.ici_hi, other.ici_lo)
+        dhi, dlo = add_byte_pair(self.ici_dense_hi, self.ici_dense_lo,
+                                 other.ici_dense_hi, other.ici_dense_lo)
         return LayerAux(self.reg + other.reg,
                         self.zf_blocks + other.zf_blocks,
                         self.n_blocks + other.n_blocks,
                         hi, lo,
-                        self.router_aux + other.router_aux)
+                        self.router_aux + other.router_aux,
+                        ihi, ilo, dhi, dlo)
 
     @property
     def zero_frac(self) -> jax.Array:
@@ -243,6 +291,26 @@ class LayerAux:
     def measured_bytes_exact(self) -> int:
         """Exact host-side readout of the accumulated byte pair."""
         return int(float(self.mb_hi)) * int(_MB_BASE) + int(float(self.mb_lo))
+
+    @property
+    def ici_bytes(self) -> jax.Array:
+        """In-graph f32 readout of per-link interconnect bytes (display)."""
+        return (jnp.asarray(self.ici_hi, jnp.float32) * jnp.float32(_MB_BASE)
+                + jnp.asarray(self.ici_lo, jnp.float32))
+
+    @property
+    def ici_dense_bytes(self) -> jax.Array:
+        return (jnp.asarray(self.ici_dense_hi, jnp.float32)
+                * jnp.float32(_MB_BASE)
+                + jnp.asarray(self.ici_dense_lo, jnp.float32))
+
+    def ici_bytes_exact(self) -> tuple[int, int]:
+        """Exact host-side (moved, dense-equivalent) per-link totals."""
+        moved = (int(float(self.ici_hi)) * int(_MB_BASE)
+                 + int(float(self.ici_lo)))
+        dense = (int(float(self.ici_dense_hi)) * int(_MB_BASE)
+                 + int(float(self.ici_dense_lo)))
+        return moved, dense
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +364,28 @@ def stream_bytes(n_live: jax.Array, bs: int, bc: int, dtype,
     item = jnp.dtype(dtype).itemsize
     return (n_live.astype(jnp.int32) * (bs * bc * item)
             + _index_bytes(n_blocks_total))
+
+
+def merge_site_aux(a: SiteAux, b: SiteAux) -> SiteAux:
+    """Fold two sites' aux into ONE SiteAux: block-weighted zero_frac,
+    summed reg/measured/ici legs, joined backend label. For call sites
+    whose public contract is a single aux but that execute an auxiliary
+    site — e.g. ``ffn_apply`` masking its layer output for the
+    compressed TP exchange under a comm context. Thresholds keep ``a``'s
+    (the primary site's) outputs — the auxiliary site never runs a
+    threshold net."""
+    na, nb = int(a.n_blocks), int(b.n_blocks)
+    nt = max(na + nb, 1)
+    zf = (jnp.float32(a.zero_frac) * na + jnp.float32(b.zero_frac) * nb) / nt
+    as_i32 = lambda v: jnp.asarray(v).astype(jnp.int32)
+    return SiteAux(
+        reg=a.reg + b.reg, zero_frac=zf,
+        measured_bytes=as_i32(a.measured_bytes) + as_i32(b.measured_bytes),
+        n_blocks=na + nb, thresholds=a.thresholds,
+        backend=f"{a.backend}+{b.backend}",
+        ici_bytes=as_i32(a.ici_bytes) + as_i32(b.ici_bytes),
+        ici_dense_bytes=(as_i32(a.ici_dense_bytes)
+                         + as_i32(b.ici_dense_bytes)))
 
 
 # ---------------------------------------------------------------------------

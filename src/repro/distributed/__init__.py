@@ -1,2 +1,7 @@
 from . import sharding  # noqa: F401
-from .ctx import sharding_hints, hint, dp_axes  # noqa: F401
+from .ctx import (comm_axis, comm_context, dp_axes, hint,  # noqa: F401
+                  sharding_hints)
+
+# collectives is imported lazily by its users (models/lm, benchmarks) to
+# keep `import repro.distributed` free of core.engine — the package init
+# must stay cheap for the XLA_FLAGS-ordering-sensitive launchers.

@@ -12,6 +12,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 _MESH = contextvars.ContextVar("repro_mesh", default=None)
 _DP = contextvars.ContextVar("repro_dp_axes", default=None)
 _TP = contextvars.ContextVar("repro_tp_axis", default="model")
+_COMM = contextvars.ContextVar("repro_comm_axis", default=None)
 
 
 @contextlib.contextmanager
@@ -56,6 +57,31 @@ def hint(x, *spec):
 
     spec = tuple(clean(s, d) for s, d in zip(spec, x.shape))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+@contextlib.contextmanager
+def comm_context(axis: str, size: int):
+    """Declare the mesh axis layer collectives exchange over (and its
+    STATIC shard count, captured here because the context is read inside
+    ``shard_map`` bodies where the mesh object is out of reach). With the
+    context active, ``ffn_apply`` / ``gather_kv_shards`` treat their
+    token rows as the local sequence shard and return the gathered
+    full-sequence output — in Zebra stream form when
+    ``distributed.collectives.resolve_comms`` allows, dense with a
+    logged reason otherwise. No context (the default everywhere today):
+    every layer exchange is a no-op, single-process semantics. The
+    caller owns the enclosing ``shard_map`` over the same axis
+    (``collectives.shard_map_compat``)."""
+    tok = _COMM.set((axis, int(size)))
+    try:
+        yield
+    finally:
+        _COMM.reset(tok)
+
+
+def comm_axis() -> tuple[str, int] | None:
+    """The active (axis name, static size) comm declaration, or None."""
+    return _COMM.get()
 
 
 def dp_axes():

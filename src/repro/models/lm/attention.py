@@ -234,6 +234,55 @@ def zebra_kv_site(k: jax.Array, v: jax.Array, zc) -> tuple[jax.Array, jax.Array,
     return out[0], out[1], auxes
 
 
+def gather_kv_shards(k: jax.Array, v: jax.Array, zc) -> tuple[jax.Array, jax.Array, list]:
+    """Gather sequence-sharded K/V ``(B, S_local, Hkv, hd)`` into the full
+    ``(B, n*S_local, Hkv, hd)`` pair over the active comm axis — in Zebra
+    stream form when the ``kv_cache`` site's backend declares the
+    ``comms`` capability, dense ``lax.all_gather`` with a logged degrade
+    reason otherwise. Heads fold onto the channel axis exactly like
+    ``zebra_kv_site`` (the cache/transport layout), so the wire blocks
+    are the same (block_seq, block_ch) tiles serve.py already moves.
+
+    No comm context: strict no-op — returns ``(k, v, [])``, the
+    single-process semantics of every existing call site.
+    """
+    from ...core.engine import zebra_site
+    from ...distributed import collectives as coll
+    from ...distributed.ctx import comm_axis
+
+    info = comm_axis()
+    if info is None:
+        return k, v, []
+    axis, n = info
+    B, S, Hkv, hd = k.shape
+    D = Hkv * hd
+    bs = zc.block_seq if S % zc.block_seq == 0 else 1
+    bc = zc.block_ch if D % zc.block_ch == 0 else D
+    backend = zc.backend_for("kv_cache")
+    comms, reason = coll.resolve_comms(backend, rows=B * S, cols=D,
+                                       bs=bs, bc=bc)
+    out, auxes = [], []
+    for t in (k, v):
+        tz, sa = zebra_site(t.reshape(B, S, D), zc, site="kv_cache",
+                            layout="tokens")
+        if comms == "compressed":
+            g, link = coll.zebra_all_gather(tz.reshape(B * S, D), axis,
+                                            bs=bs, bc=bc)
+            full = (g.reshape(n, B, S, D).transpose(1, 0, 2, 3)
+                    .reshape(B, n * S, Hkv, hd))
+            sa = coll.attach_link(sa, link)
+        else:
+            coll.log_comm_degrade("kv_cache", backend, reason)
+            full = jax.lax.all_gather(
+                tz.reshape(B, S, Hkv, hd), axis, axis=1, tiled=True)
+            sa = coll.attach_link(
+                sa, coll.dense_link(tz.size * jnp.dtype(tz.dtype).itemsize, n),
+                reason=reason)
+        out.append(full)
+        auxes.append(sa)
+    return out[0], out[1], auxes
+
+
 # ---------------------------------------------------------------------------
 # Decode (single query token vs cache)
 # ---------------------------------------------------------------------------

@@ -81,7 +81,65 @@ def ffn_apply(p, x, cfg: LMConfig, mode: str):
         y = h @ p["w_down"].astype(cdt)
     if "b_down" in p:
         y = y + p["b_down"].astype(cdt)
+    y, xaux = ffn_layer_out_exchange(y, cfg, mode)
+    if xaux is not None:
+        from ...core.engine import merge_site_aux
+        zaux = merge_site_aux(zaux, xaux)
     return y, zaux
+
+
+def ffn_layer_out_exchange(y, cfg: LMConfig, mode: str):
+    """Sequence-parallel compressed TP exchange of the FFN output.
+
+    Inside ``distributed.ctx.comm_context`` (whose owner also owns the
+    enclosing ``shard_map`` over the same axis), ``ffn_apply`` treats its
+    token rows as the LOCAL sequence shard: the output is masked at the
+    ``layer_out`` site, then every shard's map is gathered over the comm
+    axis in Zebra stream form — bitmaps first, then the ring-ppermuted
+    payload (``collectives.zebra_all_gather``), so each inbound link
+    carries only live blocks plus the 1-bit index. Returns the
+    full-sequence ``(B, n*S, d)`` output, bitwise-equal to
+    ``lax.all_gather`` of the masked shard, plus a SiteAux carrying the
+    per-link ``ici_bytes``/``ici_dense_bytes`` pair.
+
+    No comm context (everywhere today outside the collectives tests /
+    bench): strict no-op, single-process semantics — returns ``(y,
+    None)``. Capability misses (backend without ``comms="compressed"``,
+    size-1 axis, non-divisible blocks) degrade to a dense
+    ``lax.all_gather`` with the logged reason surfaced on the aux's
+    backend label.
+    """
+    from ...distributed import collectives as coll
+    from ...distributed.ctx import comm_axis
+    info = comm_axis()
+    if info is None:
+        return y, None
+    axis, n = info
+    B, S, d = y.shape
+    # constant-T_obj gating at the exchange site: the wire format is the
+    # deployed comparator's, so no threshold net regardless of train mode
+    zc = zebra_cfg_for(cfg, mode).replace(use_tnet=False)
+    if "layer_out" not in cfg.zebra_sites:
+        zc = zc.replace(enabled=False)    # lossless transport, no masking
+    bs = zc.block_seq if S % zc.block_seq == 0 else 1
+    bc = eff_block_ch(d, cfg)
+    comms, reason = coll.resolve_comms(zc.backend_for("layer_out"),
+                                       rows=B * S, cols=d, bs=bs, bc=bc)
+    yz, sa = zebra_site(y, zc, site="layer_out")
+    if comms == "compressed":
+        g, link = coll.zebra_all_gather(yz.reshape(B * S, d), axis,
+                                        bs=bs, bc=bc)
+        y_full = (g.reshape(n, B, S, d).transpose(1, 0, 2, 3)
+                  .reshape(B, n * S, d))
+        sa = coll.attach_link(sa, link)
+    else:
+        coll.log_comm_degrade("layer_out", zc.backend_for("layer_out"),
+                              reason)
+        y_full = jax.lax.all_gather(yz, axis, axis=1, tiled=True)
+        sa = coll.attach_link(
+            sa, coll.dense_link(yz.size * jnp.dtype(yz.dtype).itemsize, n),
+            reason=reason)
+    return y_full, sa
 
 
 # ---------------------------------------------------------------------------
@@ -173,31 +231,24 @@ def moe_apply_dp(p, x, cfg: LMConfig, mode: str, mesh, dp_axes_t: tuple):
     from jax.sharding import PartitionSpec as P
 
     from ...core.engine import LayerAux
+    from ...distributed.collectives import psum_exact_bytes, shard_map_compat
 
     def local_fn(p_, x_):
         y, sa, raux = moe_apply(p_, x_, cfg, mode, local=True)
         mean = lambda s: _jax.lax.pmean(s, dp_axes_t)
-        tot_i = lambda s: _jax.lax.psum(s, dp_axes_t)
         la = LayerAux.of_site(sa)
-        # psum the per-shard bytes (int32-exact per shard) split at base
-        # 2**16: each int32 leg sum stays far from overflow up to ~32k DP
-        # shards, keeping the accounting exact end-to-end — an f32 psum
-        # would round near 2**24, an unsplit int32 psum overflows at 128
-        mb = jnp.asarray(sa.measured_bytes).astype(jnp.int32)
+        # psum the per-shard bytes (int32-exact per shard) through the ONE
+        # shared exact reducer (collectives.psum_exact_bytes): split at
+        # base 2**16 so each int32 leg sum stays far from overflow up to
+        # ~32k DP shards, recombined into the (mb_hi, mb_lo) 2**24 pair
+        mb_hi, mb_lo = psum_exact_bytes(sa.measured_bytes, dp_axes_t)
         return (y, mean(jnp.float32(sa.reg)),
-                mean(la.zf_blocks), la.n_blocks,
-                tot_i(mb // 65536), tot_i(mb % 65536), mean(raux))
+                mean(la.zf_blocks), la.n_blocks, mb_hi, mb_lo, mean(raux))
 
-    y, reg, zfb, nb, hi16, lo16, raux = _jax.shard_map(
-        local_fn, mesh=mesh,
+    y, reg, zfb, nb, mb_hi, mb_lo, raux = shard_map_compat(
+        local_fn, mesh,
         in_specs=(P(), P(dp_axes_t, None, None)),
         out_specs=(P(dp_axes_t, None, None), P(), P(), P(), P(), P(), P()),
-        check_vma=False,
     )(p, x)
-    # recombine the 2**16-base legs into the (mb_hi, mb_lo) 2**24 pair in
-    # int32 (exact), then cast each leg to f32 (each < 2**24: exact)
-    rem = (hi16 % 256) * 65536 + lo16
-    mb_hi = (hi16 // 256 + rem // 16777216).astype(jnp.float32)
-    mb_lo = (rem % 16777216).astype(jnp.float32)
     return y, LayerAux(reg=reg, zf_blocks=zfb, n_blocks=nb,
                        mb_hi=mb_hi, mb_lo=mb_lo, router_aux=raux)
