@@ -1,0 +1,293 @@
+"""Stream-integrity benchmark — BENCH_faults.json.
+
+Two claims, measured at the paper's ~64%-zero-blocks operating point
+(M, K, bs, bc = 256, 1024, 8, 128):
+
+**Validation overhead is bounded** (``faults/validate.<level>`` rows):
+the engine's stream pipeline is timed at every ``ZebraConfig.validation``
+level. ``stream_bytes`` is emitted per row and asserted IDENTICAL across
+levels in-bench — turning validation on must never change what the wire
+carries — and the committed ``stream_bytes`` is drift-gated exactly by
+``scripts/bench_gate.py`` like every other byte column.
+
+**Detection is total** (``faults/detect.<boundary>.<kind>`` rows): every
+(ingest boundary x fault class) pair of the chaos matrix is exercised
+once with ``repro.ft.inject`` and must report ``detected == injected``
+(100% detection) and ``recovered == 1`` (the per-boundary policy
+restored a correct output: bitwise for stream transport / collectives /
+serve / checkpoint, allclose for the fused GEMM whose dense-recompute
+fallback accumulates in a different order). ``scripts/bench_gate.py``'s
+``gate_faults`` enforces both columns absolutely — no baseline needed.
+
+Boundaries covered: ``engine`` (in-graph producer->consumer stream),
+``fused`` (in-graph stream feeding the compressed GEMM), ``serve`` (the
+concrete prefill->decode CompressedMap handoff), ``ckpt`` (CRC-verified
+step restore + compressed-acts restore), ``ring`` (8-device all-gather /
+psum-stream hops). The ``value`` kind — a finite, nonzero payload flip —
+is paired with ``level=checksum`` everywhere: it is exactly the fault
+class structural invariants cannot see. Likewise ``ring.psum`` drop-hop
+uses checksum: a zeroed union-capacity payload is structurally legal.
+
+Standalone on purpose (NOT in ``benchmarks/run.py``'s smoke list): the
+ring boundary needs the 8-device host platform forced via XLA_FLAGS
+before jax imports, which a shared bench runner cannot guarantee.
+``scripts/ci.sh`` runs it as its own chaos shard.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}".strip()
+
+import argparse
+import functools
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, set_json_dir, timeit
+from repro.compress import integrity
+from repro.core import ZebraConfig
+from repro.core.engine import zebra_site
+from repro.distributed import collectives as coll
+from repro.ft import Fault, inject
+from repro.launch.mesh import _make_mesh
+
+M, K, N, BS, BC = 256, 1024, 512, 8, 128
+ZERO_FRAC = 0.64            # the paper's operating point
+
+
+def _operating_x(seed: int = 0) -> jax.Array:
+    """(M, K) f32 map whose blocks survive t_obj=0.5 at ~ZERO_FRAC."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random((M // BS, K // BC)) > ZERO_FRAC
+    x = rng.uniform(0.6, 1.0, size=(M, K)).astype(np.float32)
+    x *= np.repeat(np.repeat(keep, BS, 0), BC, 1)
+    return jnp.asarray(x)
+
+
+def _detect_row(name: str, level: str, injected: int, detected: int,
+                recovered: bool, policy: str) -> dict:
+    return {"name": name, "us_per_call": 0.0, "level": level,
+            "injected": int(injected), "detected": int(detected),
+            "recovered": int(bool(recovered)), "policy": policy}
+
+
+# ---------------------------------------------------------------------------
+# Overhead: the validated pipeline vs the untouched hot path
+# ---------------------------------------------------------------------------
+
+def bench_overhead(iters: int) -> list[dict]:
+    x = _operating_x()
+    rows, t_off = [], None
+    for level in ("off", "structural", "checksum"):
+        cfg = ZebraConfig(t_obj=0.5, mode="infer", backend="stream",
+                          validation=level)
+        f = jax.jit(lambda v, c=cfg: zebra_site(v, c, site="bench"))
+        y, aux = f(x)
+        us = timeit(f, x, iters=iters)
+        t_off = t_off if t_off is not None else us
+        zf = float(aux.zero_frac)
+        rows.append({"name": f"faults/validate.{level}",
+                     "us_per_call": us, "level": level,
+                     "zero_frac": round(zf, 4),
+                     "stream_bytes": int(aux.measured_bytes),
+                     "overhead_vs_off": round(us / max(t_off, 1e-9), 3)})
+    sb = {r["stream_bytes"] for r in rows}
+    assert len(sb) == 1, f"validation changed the wire: stream_bytes {sb}"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Detection matrix, boundary by boundary
+# ---------------------------------------------------------------------------
+
+def bench_engine() -> list[dict]:
+    """In-graph boundaries: stream transport and the fused consumer."""
+    x = _operating_x(1)
+    rows = []
+    cases = [("bitflip", "structural"), ("truncate", "structural"),
+             ("nan", "structural"), ("count", "structural"),
+             ("value", "checksum")]
+    for backend, bitwise in (("stream", True), ("fused", False)):
+        w = (jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+             if backend == "fused" else None)
+        for kind, level in cases:
+            cfg = ZebraConfig(t_obj=0.5, mode="infer", backend=backend,
+                              validation=level)
+            clean, _ = zebra_site(x, cfg, site="b", w=w)
+            integrity.clear_failures()
+            with inject(Fault(kind=kind, site="engine:b", arg=3)) as plan:
+                y, _ = zebra_site(x, cfg, site="b", w=w)
+                jax.block_until_ready(y)
+            yc, yf = np.asarray(clean), np.asarray(y)
+            ok = (np.array_equal(yc, yf) if bitwise
+                  else np.allclose(yc, yf, atol=1e-4, rtol=1e-4))
+            rows.append(_detect_row(
+                f"faults/detect.{backend}.{kind}", level,
+                len(plan.injected), len(integrity.failures()), ok,
+                "recompute-dense"))
+    return rows
+
+
+def bench_serve() -> list[dict]:
+    """The concrete prefill->decode handoff: per-leaf dense fallback."""
+    from repro.compress import compress_tree, decompress_tree
+    from repro.launch.serve import validate_state_ingest
+    rng = np.random.default_rng(4)
+    keep = rng.random((M // BS, K // BC)) > ZERO_FRAC
+    dense = {"k": jnp.asarray(
+        rng.normal(size=(M, K)).astype(np.float32)
+        * np.repeat(np.repeat(keep, BS, 0), BC, 1))}
+    rows = []
+    for kind, level in (("bitflip", "structural"), ("truncate", "structural"),
+                        ("nan", "structural"), ("count", "structural"),
+                        ("value", "checksum")):
+        ctree = compress_tree(dense, bs=BS, bc=BC,
+                              checksum=(level == "checksum"))
+        with inject(Fault(kind=kind, site="serve", arg=2)) as plan:
+            out, n_bad = validate_state_ingest(ctree, dense, level)
+        got = decompress_tree(out)["k"]
+        ok = np.array_equal(np.asarray(got), np.asarray(dense["k"]))
+        rows.append(_detect_row(f"faults/detect.serve.{kind}", level,
+                                len(plan.injected), n_bad, ok,
+                                "recompute-dense"))
+    return rows
+
+
+def bench_ckpt() -> list[dict]:
+    """On-disk boundary: CRC-verified restore with newest->older
+    fallback, and the compressed-acts wire check."""
+    from repro.checkpoint import CheckpointManager
+    from repro.ft import CorruptStream, corrupt_file
+    rows = []
+    d = tempfile.mkdtemp(prefix="faults_bench_ckpt_")
+    try:
+        ckpt = CheckpointManager(d, keep_last=3)
+        state = None
+        for s in (2, 4):
+            state = {"w": jnp.full((64, 64), float(s))}
+            ckpt.save(s, state, {"loader_step": s})
+        ckpt.wait()
+        corrupt_file(os.path.join(d, "step_4", "shard_0.npz"))
+        try:
+            step, tree, _ = ckpt.restore(state)
+            ok = step == 2 and float(np.asarray(tree["w"])[0, 0]) == 2.0
+            detected = 1                    # fallback fired = CRC caught it
+        except Exception:
+            ok, detected = False, 0
+        rows.append(_detect_row("faults/detect.ckpt.bitflip", "structural",
+                                1, detected, ok, "restore-older"))
+
+        acts = {"h": np.asarray(_operating_x(5))}
+        ckpt.save_acts(1, acts, compressed=True, bs=BS, bc=BC)
+        path = os.path.join(d, "acts_1.npz")
+        data = dict(np.load(path).items())
+        idx = np.array(data["h/index"])
+        idx[0] ^= 1                          # popcount no longer matches
+        data["h/index"] = idx
+        np.savez(path, **data)
+        try:
+            ckpt.restore_acts(1)
+            detected = 0
+        except CorruptStream:
+            detected = 1
+        # recovery for acts = the step-checkpoint chain still restores
+        rows.append(_detect_row("faults/detect.ckpt.acts_bitflip",
+                                "structural", 1, detected, detected == 1,
+                                "reject-named-invariant"))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def bench_ring() -> list[dict]:
+    """Mesh boundary: a dropped ring hop on the 4-device model axis."""
+    mesh = _make_mesh((2, 4), ("data", "model"))
+    n = 4
+    rng = np.random.default_rng(6)
+    keep = rng.random((n, M // BS, K // BC)) > ZERO_FRAC
+    sh = rng.normal(size=(n, M, K)).astype(np.float32) \
+        * np.repeat(np.repeat(keep, BS, 1), BC, 2)
+    X = jnp.asarray(sh.reshape(n * M, K))
+    sm = functools.partial(coll.shard_map_compat, mesh=mesh,
+                           in_specs=(P("model", None),))
+    rows = []
+
+    y_ref = jax.jit(sm(lambda x: lax.all_gather(x, "model", axis=0,
+                                                tiled=True),
+                       out_specs=P()))(X)
+    for level in ("structural", "checksum"):
+        def ag(x, lv=level):
+            y, link = coll.zebra_all_gather(x, "model", bs=BS, bc=BC,
+                                            tiled=True, validation=lv,
+                                            site="bench")
+            return y
+        integrity.clear_failures()
+        with inject(Fault(kind="drop_hop", site="ring:bench", arg=2)) as plan:
+            y = jax.jit(sm(ag, out_specs=P()))(X)
+            jax.block_until_ready(y)
+        ok = np.array_equal(np.asarray(y), np.asarray(y_ref))
+        rows.append(_detect_row(f"faults/detect.ring.drop_hop_{level}",
+                                level, len(plan.injected),
+                                min(len(integrity.failures()), 1), ok,
+                                "dense-retry"))
+
+    yp_ref = jax.jit(sm(lambda x: lax.psum(x, "model"),
+                        out_specs=P("model", None)))(X)
+
+    def ps(x):
+        y, _, _ = coll.zebra_psum_stream(x, "model", bs=BS, bc=BC,
+                                         validation="checksum", site="p")
+        return y
+    integrity.clear_failures()
+    with inject(Fault(kind="drop_hop", site="ring:p", arg=1)) as plan:
+        yp = jax.jit(sm(ps, out_specs=P("model", None)))(X)
+        jax.block_until_ready(yp)
+    ok = np.array_equal(np.asarray(yp), np.asarray(yp_ref))
+    rows.append(_detect_row("faults/detect.ring.psum_drop_hop", "checksum",
+                            len(plan.injected),
+                            min(len(integrity.failures()), 1), ok,
+                            "dense-retry"))
+    return rows
+
+
+def run(iters: int = 5) -> list[dict]:
+    if len(jax.devices()) < 8:
+        raise SystemExit(
+            "faults_bench needs 8 host devices for its ring boundary; jax "
+            "was imported before XLA_FLAGS could force them — run this "
+            "module standalone (python -m benchmarks.faults_bench)")
+    rows = bench_overhead(iters)
+    rows += bench_engine()
+    rows += bench_serve()
+    rows += bench_ckpt()
+    rows += bench_ring()
+    bad = [r for r in rows if r["name"].startswith("faults/detect.")
+           and (r["detected"] != r["injected"] or not r["recovered"])]
+    assert not bad, f"chaos matrix holes: {[r['name'] for r in bad]}"
+    emit(rows, "faults")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing iters (CI chaos shard)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_faults.json to the CWD")
+    args = ap.parse_args()
+    if args.json:
+        set_json_dir(os.getcwd())
+    run(iters=3 if args.smoke else 10)
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,7 @@ import os
 import sys
 
 FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json",
-         "BENCH_collectives.json")
+         "BENCH_collectives.json", "BENCH_faults.json")
 EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes",
               "ici_bytes", "ici_dense_bytes", "ici_predicted_bytes")
 US_EXEMPT_BELOW = 50.0
@@ -185,6 +185,67 @@ def gate_collectives(fresh_path: str) -> list[str]:
     return errors
 
 
+def gate_faults(fresh_path: str) -> list[str]:
+    """Absolute acceptance check on the fresh faults artifact (no
+    baseline involvement): every ``faults/detect.*`` row of the chaos
+    matrix must report ``detected == injected`` (100% detection across
+    the boundary x fault-class pairs) and ``recovered == 1`` (the
+    per-class policy restored a correct output), and the
+    ``faults/validate.*`` overhead rows must carry one identical
+    ``stream_bytes`` across all three levels — validation must never
+    change what the wire carries. A missing artifact is fine (the bench
+    needs a forced 8-device mesh for its ring boundary and may not have
+    run); a present artifact with no detect rows is a failure."""
+    if not os.path.exists(fresh_path):
+        print("bench_gate: no fresh BENCH_faults.json — skipping the "
+              "chaos-matrix acceptance check (chaos shard not run)")
+        return []
+    try:
+        fresh = _rows(fresh_path)
+    except (json.JSONDecodeError, KeyError):
+        return [f"{os.path.basename(fresh_path)}: unreadable — cannot check "
+                f"the chaos-matrix acceptance rows"]
+    errors = []
+    detect = {n: r for n, r in fresh.items()
+              if n.startswith("faults/detect.")}
+    if not detect:
+        return [f"{os.path.basename(fresh_path)}: no faults/detect.* rows — "
+                f"the chaos matrix emitted nothing to accept"]
+    for name, r in sorted(detect.items()):
+        missing = [k for k in ("injected", "detected", "recovered")
+                   if k not in r]
+        if missing:
+            errors.append(f"{name}: chaos columns missing: {missing}")
+            continue
+        if int(r["detected"]) != int(r["injected"]):
+            errors.append(
+                f"{name}: detected {r['detected']} != injected "
+                f"{r['injected']} — a fault class slipped past its "
+                f"boundary's validation level")
+        if int(r["recovered"]) != 1:
+            errors.append(
+                f"{name}: recovered = {r['recovered']} — the "
+                f"{r.get('policy', '?')} policy did not restore a correct "
+                f"output")
+    sb = {int(r["stream_bytes"]) for n, r in fresh.items()
+          if n.startswith("faults/validate.") and "stream_bytes" in r}
+    if len(sb) > 1:
+        errors.append(
+            f"faults/validate.*: stream_bytes differ across validation "
+            f"levels {sorted(sb)} — turning validation on changed the wire")
+    # structural validation must stay a bounded fraction of the pipeline
+    # (measured ~1.3x; the 3x bound is generous because both rows run in
+    # the same process, so the RATIO is far more stable than either
+    # absolute latency on a shared CI core)
+    st = fresh.get("faults/validate.structural")
+    if st is not None and float(st.get("overhead_vs_off", 0.0)) > 3.0:
+        errors.append(
+            f"faults/validate.structural: overhead_vs_off = "
+            f"{st['overhead_vs_off']} > 3.0 — structural validation is no "
+            f"longer cheap relative to the unvalidated pipeline")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -237,6 +298,17 @@ def main() -> None:
         print(f"bench_gate: BENCH_collectives.json ici_bytes == predicted "
               f"and < dense -> {'FAIL' if coll_errs else 'ok'}")
     all_errors.extend(coll_errs)
+
+    # absolute chaos-matrix acceptance (baseline-independent): 100%
+    # detection across the (boundary x fault class) pairs, recovery to a
+    # correct output, and a level-independent wire
+    faults_path = os.path.join(args.fresh, "BENCH_faults.json")
+    faults_errs = gate_faults(faults_path)
+    if os.path.exists(faults_path):
+        print(f"bench_gate: BENCH_faults.json detected == injected and "
+              f"recovered on every detect row -> "
+              f"{'FAIL' if faults_errs else 'ok'}")
+    all_errors.extend(faults_errs)
 
     if all_errors:
         print("\nbench_gate FAILED:", file=sys.stderr)

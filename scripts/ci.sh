@@ -12,7 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # trajectory, not ratchet against their own previous output. Falls back to
 # the working-tree copy outside a git checkout.
 mkdir -p .bench-baseline
-for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json; do
+for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json BENCH_faults.json; do
     if ! git show "HEAD:$f" > ".bench-baseline/$f" 2>/dev/null; then
         # a failed `git show` leaves a truncated file — replace it with
         # the working-tree copy, or remove it so the gate's first-run
@@ -44,6 +44,50 @@ echo "== multi-device shard (8 forced host devices): collectives tests + bench =
 python -m pytest -x -q tests/test_collectives.py tests/test_sharding_spec.py
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.collectives_bench --smoke --json
+
+# -- chaos shard: the (boundary x fault class) matrix + validation
+# overhead. Its own process for the same XLA_FLAGS reason (the ring
+# boundary needs the forced 8-device mesh). The tier-1 run above already
+# executed tests/test_faults.py; this shard produces the gated
+# BENCH_faults.json artifact.
+echo "== chaos shard (fault injection): faults bench =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.faults_bench --smoke --json
+
+echo "== BENCH_faults.json schema + chaos-matrix columns =="
+python - <<'EOF'
+import json, sys
+try:
+    with open("BENCH_faults.json") as f:
+        doc = json.load(f)
+except FileNotFoundError:
+    sys.exit("FAIL: BENCH_faults.json missing (faults_bench --json did "
+             "not write it)")
+except json.JSONDecodeError as e:
+    sys.exit(f"FAIL: BENCH_faults.json is not valid JSON: {e}")
+for key in ("bench", "schema_version", "generated_unix", "rows"):
+    if key not in doc:
+        sys.exit(f"FAIL: BENCH_faults.json missing key {key!r}")
+rows = doc["rows"]
+detect = [r for r in rows if r["name"].startswith("faults/detect.")]
+levels = {r["level"] for r in rows if r["name"].startswith("faults/validate.")}
+if levels != {"off", "structural", "checksum"}:
+    sys.exit(f"FAIL: expected overhead rows at all three validation "
+             f"levels, got {levels}")
+if not detect:
+    sys.exit("FAIL: BENCH_faults.json has no faults/detect.* rows")
+for r in detect:
+    for k in ("injected", "detected", "recovered", "policy"):
+        if k not in r:
+            sys.exit(f"FAIL: {r['name']} missing column {k!r}")
+bounds = {r["name"].split(".")[1] for r in detect}
+need = {"stream", "fused", "serve", "ckpt", "ring"}
+if not need <= bounds:
+    sys.exit(f"FAIL: chaos matrix boundaries {sorted(bounds)} missing "
+             f"{sorted(need - bounds)}")
+print(f"  BENCH_faults.json: {len(detect)} detect rows across boundaries "
+      f"{sorted(bounds)}, overhead at levels {sorted(levels)} OK")
+EOF
 
 echo "== BENCH_collectives.json schema + byte-contract columns =="
 python - <<'EOF'

@@ -9,21 +9,38 @@ corrupts the restore point. ``keep_last`` old checkpoints are retained.
 Async mode ships the device->host copy synchronously (cheap) and the disk
 write on a background thread so the train loop isn't blocked (the thread is
 joined before the next save or at close).
+
+Integrity: the manifest carries a CRC32 per leaf, computed from the host
+buffers at save time. ``restore`` re-hashes every leaf before handing the
+tree back — ``np.savez`` stores leaves *uncompressed*, so a flipped byte
+on disk loads "successfully" as silently-wrong weights; only the CRC sees
+it. A corrupt/truncated newest checkpoint makes ``restore`` fall back to
+the next-older step (the whole point of ``keep_last > 1``), raising
+``ft.faults.CorruptStream`` only when the entire chain is bad. Manifests
+from before this scheme (no ``checksums`` key) restore as before.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+_log = logging.getLogger("repro.checkpoint")
+
 PyTree = Any
 _SEP = "/"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -127,8 +144,15 @@ def save_compressed_acts(path: str, acts: dict[str, Any], bs: int = 8,
     return stats
 
 
-def load_compressed_acts(path: str) -> dict[str, np.ndarray]:
-    """Inverse of save_compressed_acts: dense maps, bit-exact."""
+def load_compressed_acts(path: str,
+                         validation: str = "off") -> dict[str, np.ndarray]:
+    """Inverse of save_compressed_acts: dense maps, bit-exact.
+
+    ``validation`` (``compress.integrity`` level) checks each stream's
+    wire contract before expansion — a flipped on-disk index bit would
+    otherwise silently relocate every later payload block. Raises
+    ``ft.faults.CorruptStream`` naming the map and invariant."""
+    from ..compress.integrity import validate_map
     from ..compress.stream import CompressedMap, decompress
 
     data = np.load(path)
@@ -154,6 +178,8 @@ def load_compressed_acts(path: str) -> dict[str, np.ndarray]:
                                index=jnp.asarray(data[f"{name}/index"]),
                                n_live=jnp.int32(payload.shape[0]),
                                shape=shape, m=m, k=k, bs=bs, bc=bc)
+            if validation != "off":
+                validate_map(cm, level=validation, site=f"ckpt-acts:{name}")
             out[name] = np.asarray(decompress(cm, use_kernel=False))
     return out
 
@@ -171,6 +197,10 @@ class CheckpointManager:
                manifest: dict) -> None:
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+        # leaf CRCs ride the background thread — hashing GBs of weights
+        # must not block the train loop any more than the disk write does
+        manifest = dict(manifest)
+        manifest["checksums"] = {k: _crc(v) for k, v in flat.items()}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -232,18 +262,79 @@ class CheckpointManager:
                     for name, a in arrs.items()}
         return save_compressed_acts(path, acts, bs=bs, bc=bc, block_hw=block_hw)
 
-    def restore_acts(self, step: int) -> dict[str, np.ndarray]:
+    def restore_acts(self, step: int,
+                     validation: str = "structural") -> dict[str, np.ndarray]:
         path = os.path.join(self.dir, f"acts_{step}.npz")
-        return load_compressed_acts(path)
+        return load_compressed_acts(path, validation=validation)
 
-    def restore(self, like: PyTree, step: int | None = None) -> tuple[int, PyTree, dict]:
-        self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+    # ------------------------------------------------------------------
+    def verify(self, step: int) -> dict:
+        """Check one checkpoint end-to-end (readable manifest, leaf set
+        matches, every leaf CRC matches) and return its manifest. Raises
+        ``ft.faults.CorruptStream`` naming what failed. Pre-checksum
+        manifests verify structurally only."""
+        from ..ft.faults import CorruptStream
         path = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        tree = load_pytree(path, like)
-        return step, tree, manifest.get("extra", {})
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(path, "shard_0.npz"))
+            keys = set(data.files)
+        except CorruptStream:
+            raise
+        except Exception as e:  # truncated zip/json, missing files, ...
+            raise CorruptStream(
+                f"ckpt step_{step}: unreadable ({type(e).__name__}: {e})"
+            ) from e
+        paths = manifest.get("paths")
+        if paths is not None and set(paths) != keys:
+            raise CorruptStream(
+                f"ckpt step_{step}: leaf set mismatch — manifest lists "
+                f"{len(paths)} leaves, shard holds {len(keys)}")
+        sums = manifest.get("checksums")
+        if sums:
+            for k in sorted(keys):
+                try:
+                    got = _crc(data[k])
+                except Exception as e:  # zip-member CRC/truncation on read
+                    raise CorruptStream(
+                        f"ckpt step_{step}: leaf {k!r} unreadable "
+                        f"({type(e).__name__}: {e})") from e
+                want = int(sums.get(k, got))
+                if got != want:
+                    raise CorruptStream(
+                        f"ckpt step_{step}: leaf {k!r} CRC mismatch "
+                        f"(manifest {want:#010x}, on-disk {got:#010x})")
+        return manifest
+
+    def restore(self, like: PyTree, step: int | None = None,
+                verify: bool = True) -> tuple[int, PyTree, dict]:
+        """Restore the newest VERIFIED checkpoint (or the explicit
+        ``step``). A corrupt candidate falls back to the next-older step
+        with a warning; an explicitly requested step never falls back."""
+        from ..ft.faults import CorruptStream
+        self.wait()
+        candidates = [step] if step is not None else \
+            list(reversed(self.all_steps()))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        last: Exception | None = None
+        for s in candidates:
+            path = os.path.join(self.dir, f"step_{s}")
+            try:
+                if verify:
+                    manifest = self.verify(s)
+                else:
+                    with open(os.path.join(path, "manifest.json")) as f:
+                        manifest = json.load(f)
+                tree = load_pytree(path, like)
+                return s, tree, manifest.get("extra", {})
+            except Exception as e:  # noqa: BLE001 — chain fallback below
+                if step is not None or isinstance(e, KeyboardInterrupt):
+                    raise
+                _log.warning("ckpt step_%s failed to restore (%s); falling "
+                             "back to older step", s, e)
+                last = e
+        raise CorruptStream(
+            f"no restorable checkpoint under {self.dir}: all of "
+            f"{candidates} failed verification") from last

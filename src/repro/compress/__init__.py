@@ -14,3 +14,12 @@ from .stream import (  # noqa: F401
     transport_tokens,
 )
 from .meter import BandwidthMeter, SiteRecord  # noqa: F401
+from .integrity import (  # noqa: F401
+    VALIDATION_LEVELS,
+    attach_checksum,
+    check_stream,
+    map_checksum,
+    stream_checksum,
+    validate_map,
+    validate_payload,
+)

@@ -1,0 +1,282 @@
+"""Stream integrity — the validated wire contract of the (bitmap, payload)
+stream.
+
+Every boundary the compressed stream crosses (jit handoffs, checkpointed
+activation maps, mesh collectives) trusts two things that nothing used to
+check: the consumer slot map is *derived* from bitmap prefix sums, so one
+flipped bitmap bit silently relocates every later payload block, and a
+truncated or NaN-poisoned payload flows straight into the GEMM. This
+module is the ONE place the wire contract is written down and checked,
+at three ``ZebraConfig.validation`` levels:
+
+``off``
+    No checks, no checksum — the hot path is bit-identical to the
+    pre-validation code (bench-gated: stream_bytes and kernel latency
+    unchanged).
+``structural``
+    Cheap invariants computable from the stream alone:
+    * ``n_live == popcount(bitmap)`` — the producer counter and the
+      index must agree (catches any single bitmap bit flip: popcount
+      moves by exactly 1);
+    * payload buffer capacity == total block count (static shape check);
+    * every live payload slot is fully finite (catches NaN/Inf poison);
+    * every live payload slot has at least one nonzero element — a kept
+      block always does (the comparator keeps ``max|x| >= t_obj > 0``;
+      the lossless bitmap keeps ``max|x| > 0``), so an all-zero live
+      slot means the payload was truncated or the slot map shifted.
+``checksum``
+    Structural plus a uint32 position-mixed XOR fold over the bitmap
+    bits, the live payload words and ``n_live`` — detects arbitrary
+    content corruption (e.g. a live value flipped to another finite
+    nonzero value, which structural invariants cannot see). Computed
+    in-graph by the producer (``stream_checksum``), carried in
+    ``CompressedMap.checksum`` / alongside the stream, recomputed and
+    compared on ingest.
+
+Two API surfaces for the two kinds of boundary:
+
+* **In-graph** (:func:`check_stream`): returns a traced bool "stream is
+  intact" flag — the engine and the collectives gate a
+  ``lax.cond``-style recompute-from-dense fallback on it. A detected
+  failure also fires :func:`note_failure` (a ``jax.debug.callback``)
+  so chaos tests and the faults bench can observe detections from
+  outside the jit.
+* **Host-side** (:func:`validate_map` / :func:`validate_payload`):
+  raises :class:`repro.ft.faults.CorruptStream` with the failed
+  invariant named — for boundaries where the stream is concrete
+  (serve's prefill -> decode handoff, checkpoint restore), where the
+  caller routes the exception through the ``ft.faults`` policy table.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+_log = logging.getLogger("repro.integrity")
+
+VALIDATION_LEVELS = ("off", "structural", "checksum")
+
+# Knuth multiplicative-hash constants (odd -> bijective mod 2**32): the
+# position mix makes the XOR fold order-sensitive, so two swapped words
+# or two identical flips at different positions still change the fold.
+_K1 = np.uint32(2654435761)
+_K2 = np.uint32(40503 * 65537 + 1)
+
+
+def validate_level(level: str) -> str:
+    if level not in VALIDATION_LEVELS:
+        raise ValueError(f"unknown validation level {level!r}; expected one "
+                         f"of {VALIDATION_LEVELS}")
+    return level
+
+
+# ---------------------------------------------------------------------------
+# uint32 folds (in-graph; also run host-side on concrete arrays)
+# ---------------------------------------------------------------------------
+
+def _xor_reduce(x: jax.Array, axis: int) -> jax.Array:
+    return lax.reduce(x, np.uint32(0), lax.bitwise_xor, (axis,))
+
+
+def _payload_words(payload: jax.Array) -> jax.Array:
+    """(nb, bs, bc) payload -> (nb, words) uint32 bit patterns."""
+    nb = payload.shape[0]
+    flat = payload.reshape(nb, -1)
+    if flat.dtype == jnp.float32:
+        return lax.bitcast_convert_type(flat, jnp.uint32)
+    if flat.dtype in (jnp.bfloat16, jnp.float16):
+        return lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.uint32)
+    # integer payloads (not produced today): fold the values themselves
+    return flat.astype(jnp.uint32)
+
+
+def _slot_hashes(payload: jax.Array) -> jax.Array:
+    """Per-slot position-mixed XOR fold -> (nb,) uint32."""
+    words = _payload_words(payload)
+    j = jnp.arange(words.shape[1], dtype=jnp.uint32)
+    return _xor_reduce((words + j) * _K1, axis=1)
+
+
+def stream_checksum(payload: jax.Array, bitmap: jax.Array,
+                    n_live: jax.Array) -> jax.Array:
+    """uint32 checksum of one stream: bitmap bits + live payload slots +
+    the live count, each position-mixed before the XOR fold. Dead slots
+    (index >= n_live) are excluded, so producers that leave garbage in
+    the worst-case tail and producers that zero it hash identically."""
+    nb = payload.shape[0]
+    bits = bitmap.reshape(-1).astype(jnp.uint32)
+    i = jnp.arange(bits.shape[0], dtype=jnp.uint32)
+    bm_hash = _xor_reduce((bits + i) * _K1, axis=0)
+    slot = _slot_hashes(payload)
+    s = jnp.arange(nb, dtype=jnp.uint32)
+    live = s < n_live.astype(jnp.uint32)
+    pl_hash = _xor_reduce(jnp.where(live, (slot + s) * _K2, jnp.uint32(0)),
+                          axis=0)
+    return (bm_hash * _K2) ^ pl_hash ^ (n_live.astype(jnp.uint32) * _K1)
+
+
+# ---------------------------------------------------------------------------
+# In-graph validation
+# ---------------------------------------------------------------------------
+
+def _static_contract(payload, bitmap, bs: int, bc: int) -> None:
+    """Shape-level invariants are static — a wrong capacity is a
+    programming error at trace time, not data corruption."""
+    nb = int(bitmap.shape[0]) * int(bitmap.shape[1])
+    if tuple(payload.shape) != (nb, bs, bc):
+        raise ValueError(
+            f"stream contract: payload {tuple(payload.shape)} != worst-case "
+            f"capacity {(nb, bs, bc)} for bitmap {tuple(bitmap.shape)}")
+
+
+def check_stream(payload: jax.Array, bitmap: jax.Array, n_live: jax.Array,
+                 *, level: str, checksum: jax.Array | None = None,
+                 live_nonzero: bool = True) -> jax.Array:
+    """Traced bool: does this stream satisfy the wire contract at
+    ``level``? ``level="off"`` returns constant True (and traces no
+    checks at all, keeping the gated-off hot path untouched).
+
+    ``live_nonzero`` asserts the kept-block invariant (every live slot
+    has a nonzero element); disable it for streams whose bitmap can
+    legitimately keep all-zero blocks (t_obj == 0, or union-capacity
+    payloads where a slot is live in the union but zero locally).
+    """
+    validate_level(level)
+    if level == "off":
+        return jnp.bool_(True)
+    _static_contract(payload, bitmap, payload.shape[1], payload.shape[2])
+    nb = payload.shape[0]
+    n_live = jnp.asarray(n_live).astype(jnp.int32)
+    pop = jnp.sum(bitmap.astype(jnp.int32))
+    ok = (n_live == pop) & (n_live >= 0) & (n_live <= nb)
+    slot_idx = jnp.arange(nb, dtype=jnp.int32)
+    live = slot_idx < n_live
+    flat = payload.reshape(nb, -1)
+    if jnp.issubdtype(flat.dtype, jnp.floating):
+        slot_finite = jnp.all(jnp.isfinite(flat.astype(jnp.float32)), axis=1)
+        ok = ok & jnp.all(jnp.where(live, slot_finite, True))
+    if live_nonzero:
+        slot_nz = jnp.max(jnp.abs(flat.astype(jnp.float32)), axis=1) > 0
+        ok = ok & jnp.all(jnp.where(live, slot_nz, True))
+    if level == "checksum" and checksum is not None:
+        ok = ok & (stream_checksum(payload, bitmap, n_live)
+                   == jnp.asarray(checksum).astype(jnp.uint32))
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Detection observability (jit-safe)
+# ---------------------------------------------------------------------------
+
+_FAILURES: list[str] = []
+
+
+def note_failure(site: str) -> None:
+    """Record one detected-and-recovered stream failure. Call from inside
+    jit via ``jax.debug.callback(integrity.note_failure, site=...)`` on
+    the recovery branch — the chaos tests and faults bench read
+    :func:`failures` to assert the detection actually fired (bitwise
+    parity of the recovered output alone cannot distinguish "detected
+    and recovered" from "fault never bit")."""
+    _FAILURES.append(str(site))
+
+
+def failures() -> list[str]:
+    return list(_FAILURES)
+
+
+def clear_failures() -> None:
+    _FAILURES.clear()
+
+
+# ---------------------------------------------------------------------------
+# Host-side validation (concrete streams at process boundaries)
+# ---------------------------------------------------------------------------
+
+def validate_payload(payload, bitmap, n_live, *, level: str,
+                     checksum=None, live_nonzero: bool = True,
+                     site: str = "stream") -> None:
+    """Validate one concrete stream; raise ``ft.faults.CorruptStream``
+    naming the first failed invariant. The checks mirror
+    :func:`check_stream` exactly — one contract, two surfaces."""
+    from ..ft.faults import CorruptStream
+    validate_level(level)
+    if level == "off":
+        return
+    payload = np.asarray(payload)
+    bitmap = np.asarray(bitmap)
+    nl = int(n_live)
+    nb = bitmap.size
+    if payload.ndim != 3:
+        raise CorruptStream(f"{site}: payload shape {payload.shape} is not "
+                            f"a (n_blocks, bs, bc) buffer")
+    if payload.shape[0] != nb:
+        raise CorruptStream(f"{site}: payload capacity {payload.shape[0]} != "
+                            f"block count {nb}")
+    pop = int(bitmap.astype(np.int64).sum())
+    if not (0 <= nl <= nb):
+        raise CorruptStream(f"{site}: n_live {nl} outside [0, {nb}]")
+    if nl != pop:
+        raise CorruptStream(f"{site}: n_live {nl} != popcount(bitmap) {pop} "
+                            f"— a flipped index bit relocates every later "
+                            f"payload block")
+    flat = payload.reshape(nb, -1).astype(np.float32)
+    live = np.arange(nb) < nl
+    if np.issubdtype(payload.dtype, np.floating) or payload.dtype.name == "bfloat16":
+        bad = live & ~np.isfinite(flat).all(axis=1)
+        if bad.any():
+            raise CorruptStream(f"{site}: non-finite payload in live slot "
+                                f"{int(np.argmax(bad))}")
+    if live_nonzero:
+        zeroed = live & (np.abs(flat).max(axis=1, initial=0.0) == 0)
+        if zeroed.any():
+            raise CorruptStream(
+                f"{site}: live payload slot {int(np.argmax(zeroed))} is "
+                f"all-zero — truncated payload or shifted slot map")
+    if level == "checksum":
+        if checksum is None:
+            raise CorruptStream(f"{site}: validation level 'checksum' but "
+                                f"the stream carries no checksum")
+        want = int(np.uint32(checksum))
+        got = int(np.asarray(stream_checksum(
+            jnp.asarray(payload), jnp.asarray(bitmap), jnp.int32(nl))))
+        if got != want:
+            raise CorruptStream(f"{site}: checksum mismatch (stored "
+                                f"{want:#010x}, recomputed {got:#010x})")
+
+
+def validate_map(cm: Any, *, level: str, live_nonzero: bool = True,
+                 site: str = "stream") -> None:
+    """Host-side ingest validation of one ``CompressedMap`` (raises
+    ``CorruptStream``). The packed index is unpacked to the (nm, nk)
+    bitmap first — the same representation the in-graph contract folds."""
+    from .stream import unpack_bitmap
+    validate_level(level)
+    if level == "off":
+        return
+    bitmap = unpack_bitmap(jnp.asarray(cm.index), cm.m // cm.bs,
+                           cm.k // cm.bc)
+    validate_payload(cm.payload, bitmap, cm.n_live, level=level,
+                     checksum=cm.checksum, live_nonzero=live_nonzero,
+                     site=site)
+
+
+def map_checksum(cm: Any) -> jax.Array:
+    """The stream checksum of one ``CompressedMap`` (over the unpacked
+    bitmap + live payload + n_live)."""
+    from .stream import unpack_bitmap
+    bitmap = unpack_bitmap(jnp.asarray(cm.index), cm.m // cm.bs,
+                           cm.k // cm.bc)
+    return stream_checksum(jnp.asarray(cm.payload), bitmap,
+                           jnp.asarray(cm.n_live))
+
+
+def attach_checksum(cm: Any) -> Any:
+    """Return the map with its checksum computed and carried in-band."""
+    import dataclasses
+    return dataclasses.replace(cm, checksum=map_checksum(cm))

@@ -56,7 +56,14 @@ def unpack_bitmap(packed: jax.Array, nm: int, nk: int) -> jax.Array:
 @dataclasses.dataclass
 class CompressedMap:
     """One compressed activation map: worst-case payload buffer (live blocks
-    first, zero tail), packed index, and the measured live count."""
+    first, zero tail), packed index, and the measured live count.
+
+    ``checksum`` is the optional in-band integrity word
+    (``compress.integrity.stream_checksum`` — uint32 position-mixed XOR
+    fold over bitmap bits + live payload + n_live). ``None`` (default)
+    keeps the pre-integrity wire format; producers attach it when
+    ``ZebraConfig.validation == "checksum"`` and ingest boundaries
+    recompute and compare."""
     payload: jax.Array          # (n_blocks, bs, bc), activation dtype
     index: jax.Array            # (ceil(n_blocks/8),) uint8
     n_live: jax.Array           # () int32
@@ -65,14 +72,16 @@ class CompressedMap:
     k: int                      # flattened cols
     bs: int
     bc: int
+    checksum: jax.Array | None = None   # () uint32, or None (unchecksummed)
 
     def tree_flatten(self):
-        return ((self.payload, self.index, self.n_live),
+        return ((self.payload, self.index, self.n_live, self.checksum),
                 (self.shape, self.m, self.k, self.bs, self.bc))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        payload, index, n_live, checksum = children
+        return cls(payload, index, n_live, *aux, checksum=checksum)
 
     # --- measured stream accounting (host side; n_live must be concrete) ---
     @property
@@ -118,10 +127,12 @@ def nonzero_bitmap(x: jax.Array, bs: int, bc: int) -> jax.Array:
 
 
 def compress(x: jax.Array, bitmap: jax.Array | None = None, *, bs: int = 8,
-             bc: int = 128, use_kernel: bool = True, interpret: bool = True
-             ) -> CompressedMap:
+             bc: int = 128, use_kernel: bool = True, interpret: bool = True,
+             checksum: bool = False) -> CompressedMap:
     """(..., K) map -> CompressedMap. Leading dims flatten onto M. With no
-    bitmap the nonzero-block bitmap is used (always lossless)."""
+    bitmap the nonzero-block bitmap is used (always lossless).
+    ``checksum=True`` computes the in-band integrity word in-graph
+    (``integrity.stream_checksum``) and carries it on the map."""
     shape = tuple(x.shape)
     x2 = x.reshape(-1, shape[-1])
     M, K = x2.shape
@@ -132,8 +143,13 @@ def compress(x: jax.Array, bitmap: jax.Array | None = None, *, bs: int = 8,
                                      interpret=interpret)
     else:
         payload, n_live = ref.zebra_pack_ref(x2, bitmap, bs, bc)
+    csum = None
+    if checksum:
+        from .integrity import stream_checksum
+        csum = stream_checksum(payload, bitmap, n_live)
     return CompressedMap(payload=payload, index=pack_bitmap(bitmap),
-                         n_live=n_live, shape=shape, m=M, k=K, bs=bs, bc=bc)
+                         n_live=n_live, shape=shape, m=M, k=K, bs=bs, bc=bc,
+                         checksum=csum)
 
 
 def decompress(cm: CompressedMap, *, use_kernel: bool = True,
@@ -148,7 +164,8 @@ def decompress(cm: CompressedMap, *, use_kernel: bool = True,
 
 
 def compress_masked(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
-                    interpret: bool = True) -> CompressedMap:
+                    interpret: bool = True, checksum: bool = False
+                    ) -> CompressedMap:
     """Streaming lossy codec entry: raw (..., K) map -> Zebra-thresholded
     CompressedMap via the two-phase parallel producer (``zebra_mask_pack``)
     — the dense masked map is never materialized on the way into the
@@ -158,8 +175,13 @@ def compress_masked(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
     M, K = x2.shape
     payload, bitmap, n_live = zebra_mask_pack(x2, t_obj=t_obj, bs=bs, bc=bc,
                                               interpret=interpret)
+    csum = None
+    if checksum:
+        from .integrity import stream_checksum
+        csum = stream_checksum(payload, bitmap, n_live)
     return CompressedMap(payload=payload, index=pack_bitmap(bitmap),
-                         n_live=n_live, shape=shape, m=M, k=K, bs=bs, bc=bc)
+                         n_live=n_live, shape=shape, m=M, k=K, bs=bs, bc=bc,
+                         checksum=csum)
 
 
 def transport_tokens(x: jax.Array, t_obj: float, *, bs: int = 8, bc: int = 128,
@@ -189,10 +211,12 @@ def _path_str(path) -> str:
 
 def compress_tree(tree: Any, *, bs: int = 8, bc: int = 128,
                   use_kernel: bool = True, interpret: bool = True,
-                  meter=None, site: str = "acts") -> Any:
+                  meter=None, site: str = "acts",
+                  checksum: bool = False) -> Any:
     """Compress every compatible floating leaf of a pytree (lossless,
     nonzero-block bitmap); incompatible leaves pass through dense. Each leaf
-    is recorded on `meter` under "<site>/<path>"."""
+    is recorded on `meter` under "<site>/<path>". ``checksum=True``
+    attaches the in-band integrity word per compressed leaf."""
     def one(path, leaf):
         name = f"{site}/{_path_str(path)}"
         dims = None
@@ -210,7 +234,7 @@ def compress_tree(tree: Any, *, bs: int = 8, bc: int = 128,
                                    jnp.dtype(leaf.dtype).itemsize)
             return leaf
         cm = compress(leaf.reshape(dims), bs=bs, bc=bc, use_kernel=use_kernel,
-                      interpret=interpret)
+                      interpret=interpret, checksum=checksum)
         cm = dataclasses.replace(cm, shape=tuple(leaf.shape))
         if meter is not None:
             meter.record(name, cm)

@@ -85,6 +85,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from . import backends
 from .backends import BackendSpec, backend_names, backend_spec
@@ -497,6 +498,74 @@ _INFER_IMPLS: dict[str, Callable] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Validated ingest (cfg.validation != "off") — the wire contract enforced
+# at the producer -> consumer boundary, with recompute-from-dense recovery
+# ---------------------------------------------------------------------------
+
+def _validated_stream_impl(x2: jax.Array, bs: int, bc: int, cfg: ZebraConfig,
+                           w: jax.Array | None = None, *, site: str = ""):
+    """The stream/fused pipeline with the ``compress.integrity`` contract
+    checked between producer and consumer: mask_pack -> (chaos tap) ->
+    ``check_stream`` -> unpack / payload GEMM, with a ``lax.cond``
+    recovery branch that recomputes from the dense map still in hand
+    (``ft.faults`` policy "recompute-dense" — the dense source of an
+    engine-internal stream is x2 itself). The recovery branch fires
+    ``integrity.note_failure`` via ``jax.debug.callback`` so detections
+    are observable from outside the jit. Checksum level seals the stream
+    BEFORE the tap — corruption in flight must break the fold."""
+    from ..compress import integrity
+    from ..ft.inject import stream_tap
+    from ..kernels.ref import zebra_mask_ref, zebra_unpack_ref
+
+    level = cfg.validation
+    tag = f"engine:{site or 'map'}"
+    M, K = x2.shape
+    payload, bitmap, n_live = _mask_pack(x2, bs, bc, cfg)
+    csum = (integrity.stream_checksum(payload, bitmap, n_live)
+            if level == "checksum" else None)
+    payload, bitmap, n_live = stream_tap(payload, bitmap, n_live, site=tag)
+    ok = integrity.check_stream(payload, bitmap, n_live, level=level,
+                                checksum=csum,
+                                live_nonzero=cfg.t_obj > 0)
+
+    def recover_mask():
+        jax.debug.callback(lambda t=tag: integrity.note_failure(t))
+        return zebra_mask_ref(x2, cfg.t_obj, bs, bc)
+
+    if w is None:
+        y2, bm = lax.cond(
+            ok,
+            lambda: (zebra_unpack_ref(payload, bitmap, bs, bc),
+                     bitmap.astype(jnp.int8)),
+            recover_mask)
+        n_cols = None
+    else:
+        from ..kernels.spmm_cs import zebra_spmm_cs
+        plan = cfg.gemm_plan_for(M, K, bs, bc, x2.dtype, n=w.shape[-1])
+
+        def consume():
+            out = zebra_spmm_cs(payload, w, bitmap, bs=bs, bc=bc, bn=plan.bn,
+                                stm=plan.stm, stk=plan.stk, caps=plan.caps,
+                                zero_frac_hint=cfg.zero_frac_hint,
+                                interpret=cfg.interpret)
+            return out.astype(x2.dtype), bitmap.astype(jnp.int8)
+
+        def recover():
+            y, keep = recover_mask()
+            return ((y.astype(jnp.float32) @ w.astype(jnp.float32))
+                    .astype(x2.dtype), keep)
+
+        y2, bm = lax.cond(ok, consume, recover)
+        n_cols = w.shape[-1]
+    n_keep = jnp.sum(bm.astype(jnp.int32))
+    measured = stream_bytes(n_keep, bs, bc, x2.dtype, bm.size)
+    return y2, bm, measured, n_cols
+
+
+_VALIDATED_BACKENDS = ("stream", "fused")
+
+
 def register_engine_backend(spec: BackendSpec, infer_impl: Callable,
                             forward_variant: Callable | None = None
                             ) -> BackendSpec:
@@ -686,7 +755,11 @@ def zebra_site(x: jax.Array, cfg: ZebraConfig, *, site: str = "",
                           measured_bytes=measured, n_blocks=nb_sample,
                           thresholds=None, backend=label)
 
-    y2, bitmap, measured, n_cols = _INFER_IMPLS[backend](x2, bs, bc, cfg, w)
+    if cfg.validation != "off" and backend in _VALIDATED_BACKENDS:
+        y2, bitmap, measured, n_cols = _validated_stream_impl(
+            x2, bs, bc, cfg, w if backend == "fused" else None, site=site)
+    else:
+        y2, bitmap, measured, n_cols = _INFER_IMPLS[backend](x2, bs, bc, cfg, w)
     y = (y2.reshape(x.shape) if n_cols is None
          else y2.reshape(*x.shape[:-1], n_cols))
     zero_frac = 1.0 - jnp.mean(bitmap.astype(jnp.float32))

@@ -72,16 +72,26 @@ class ZebraConfig:
                                  # the scheduled consumers' capacity
                                  # ladder; never changes kernel-form
                                  # supertiles (numerics stay hint-free)
+    validation: str = "off"      # stream-integrity level at every boundary
+                                 # that consumes a (bitmap, payload) stream
+                                 # (compress.integrity): "off" (hot path
+                                 # untouched) | "structural" (popcount /
+                                 # finite / live-slot invariants +
+                                 # recompute-from-dense recovery) |
+                                 # "checksum" (+ uint32 fold carried
+                                 # in-band, catches finite value flips)
 
     def __post_init__(self):
         # config-time validation against the capability registry — a typo'd
         # backend fails where the config is built, not at first dispatch
         from .backends import validate_backend
+        from ..compress.integrity import validate_level
         if self.backend:
             validate_backend(self.backend)
         for _, name in self.site_backends:
             if name:
                 validate_backend(name)
+        validate_level(self.validation)
 
     def replace(self, **kw) -> "ZebraConfig":
         return dataclasses.replace(self, **kw)

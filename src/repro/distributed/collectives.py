@@ -168,7 +168,9 @@ def _pack_consumer_order(x2: jax.Array, bitmap: jax.Array, bs: int, bc: int
 # ---------------------------------------------------------------------------
 
 def zebra_all_gather(x2: jax.Array, axis, *, bs: int, bc: int,
-                     bitmap: jax.Array | None = None, tiled: bool = False
+                     bitmap: jax.Array | None = None, tiled: bool = False,
+                     validation: str = "off", live_nonzero: bool = True,
+                     site: str = "all_gather"
                      ) -> tuple[jax.Array, LinkBytes]:
     """All-gather a block-sparse (M, K) shard in Zebra stream form.
 
@@ -180,6 +182,17 @@ def zebra_all_gather(x2: jax.Array, axis, *, bs: int, bc: int,
     are exact zeros — always true for the default ``nonzero_bitmap``
     and for any Zebra-masked map under its keep bitmap.
 
+    ``validation`` (a ``compress.integrity`` level) checks every
+    arriving hop's stream against its own gathered bitmap (+ its
+    producer checksum at the ``checksum`` level) before trusting it. A
+    failed hop anywhere on the ring makes EVERY device — the ok flags
+    are made uniform with a psum first, collectives inside ``lax.cond``
+    require one branch ring-wide — retry the whole exchange as a dense
+    ``lax.all_gather`` of the shard still in hand (``ft.faults`` policy
+    "recompute-dense" + dense-comms retry), firing
+    ``integrity.note_failure`` once per device. The retry traffic is
+    accounted on top of the wasted compressed attempt.
+
     Returns ``(gathered, LinkBytes)``: ``(n, M, K)`` stacked like
     ``lax.all_gather`` (or ``(n*M, K)`` with ``tiled=True``), plus the
     per-inbound-link accounting — over the ring each link carries every
@@ -189,6 +202,9 @@ def zebra_all_gather(x2: jax.Array, axis, *, bs: int, bc: int,
                                 + ceil(nm * nk / 8)
         dense = (n - 1) * M * K * itemsize
     """
+    from ..compress import integrity
+    from ..ft.inject import ring_hop_tap
+
     M, K = x2.shape
     if M % bs or K % bc:
         raise ValueError(f"zebra_all_gather: shard ({M}, {K}) not divisible "
@@ -201,26 +217,50 @@ def zebra_all_gather(x2: jax.Array, axis, *, bs: int, bc: int,
     item = jnp.dtype(x2.dtype).itemsize
     if n == 1:
         return (x2 if tiled else x2[None]), zero_link()
+    tag = f"ring:{site}"
 
     payload, _ = _pack_consumer_order(x2, bitmap, bs, bc)
     bitmaps = lax.all_gather(bitmap, axis)               # (n, nm, nk)
+    counts = bitmaps.astype(jnp.int32).sum(axis=(1, 2))  # per-shard n_live
+    csums = None
+    if validation == "checksum":
+        my_csum = integrity.stream_checksum(payload, bitmap,
+                                            counts[lax.axis_index(axis)])
+        csums = lax.all_gather(my_csum, axis)            # (n,)
     idx = lax.axis_index(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
-    def hop(pl, h):
+    def hop(carry, h):
         # after hop h (1-based), this device holds shard (idx - h) % n
+        pl, ok = carry
         pl = lax.ppermute(pl, axis, perm)
+        pl = ring_hop_tap(pl, h, site=tag)
         src = (idx - h) % n
-        return pl, (zebra_unpack_ref(pl, bitmaps[src], bs, bc), src)
+        if validation != "off":
+            ok = ok & integrity.check_stream(
+                pl, bitmaps[src], counts[src], level=validation,
+                checksum=None if csums is None else csums[src],
+                live_nonzero=live_nonzero)
+        return (pl, ok), (zebra_unpack_ref(pl, bitmaps[src], bs, bc), src)
 
-    _, (shards, srcs) = lax.scan(hop, payload, jnp.arange(1, n))
+    (_, ok), (shards, srcs) = lax.scan(hop, (payload, jnp.bool_(True)),
+                                       jnp.arange(1, n))
     out = jnp.zeros((n, M, K), x2.dtype).at[idx].set(x2)
     out = out.at[srcs].set(shards)
 
-    counts = bitmaps.astype(jnp.int32).sum(axis=(1, 2))  # per-shard n_live
     streams = stream_bytes(counts, bs, bc, x2.dtype, nm * nk)
     moved = (jnp.sum(streams) - streams[idx]).astype(jnp.int32)
     dense = jnp.int32((n - 1) * M * K * item)
+    if validation != "off":
+        # any corrupt hop anywhere -> the whole ring retries dense
+        ok_ring = lax.psum(ok.astype(jnp.int32), axis) == n
+
+        def retry_dense():
+            jax.debug.callback(lambda t=tag: integrity.note_failure(t))
+            return lax.all_gather(x2, axis)
+
+        out = lax.cond(ok_ring, lambda: out, retry_dense)
+        moved = jnp.where(ok_ring, moved, moved + dense)
     return (out.reshape(n * M, K) if tiled else out), LinkBytes(moved, dense)
 
 
@@ -229,7 +269,8 @@ def zebra_all_gather(x2: jax.Array, axis, *, bs: int, bc: int,
 # ---------------------------------------------------------------------------
 
 def zebra_psum_stream(g2: jax.Array, axis, *, bs: int, bc: int,
-                      bitmap: jax.Array | None = None
+                      bitmap: jax.Array | None = None,
+                      validation: str = "off", site: str = "psum"
                       ) -> tuple[jax.Array, jax.Array, LinkBytes]:
     """psum of hard-masked maps (``g * bitmap`` — the activation-gradient
     form under the hard grad mode) that never densifies mid-flight.
@@ -252,7 +293,19 @@ def zebra_psum_stream(g2: jax.Array, axis, *, bs: int, bc: int,
         dense = (n - 1) * M * K * itemsize
 
     (both sides modeled as the same gather-and-reduce ring: full
-    buffers circulate, the reduction rides the ring in stream form)."""
+    buffers circulate, the reduction rides the ring in stream form).
+
+    ``validation`` checks each ARRIVING payload (at hop h the traveling
+    buffer is one shard's original union-capacity stream) before it is
+    added: finiteness at ``structural``; + the producer's gathered
+    checksum at ``checksum`` level — which is the level that sees a
+    dropped hop here, since a zeroed union-capacity payload is
+    structurally legal (slots live in the union may be zero locally,
+    the ``live_nonzero`` invariant does not apply). On any failure the
+    whole ring retries as a dense ``lax.psum``."""
+    from ..compress import integrity
+    from ..ft.inject import ring_hop_tap
+
     M, K = g2.shape
     if M % bs or K % bc:
         raise ValueError(f"zebra_psum_stream: shard ({M}, {K}) not "
@@ -264,29 +317,53 @@ def zebra_psum_stream(g2: jax.Array, axis, *, bs: int, bc: int,
     item = jnp.dtype(g2.dtype).itemsize
     if n == 1:
         return g2, bitmap.astype(jnp.int8), zero_link()
+    tag = f"ring:{site}"
 
     bitmaps = lax.all_gather(bitmap, axis)               # (n, nm, nk)
     union = (bitmaps.astype(jnp.int32).sum(axis=0) > 0).astype(jnp.int8)
     payload, _ = _pack_consumer_order(g2, union, bs, bc)
+    u_live = jnp.sum(union.astype(jnp.int32))
+    idx = lax.axis_index(axis)
+    csums = None
+    if validation == "checksum":
+        csums = lax.all_gather(
+            integrity.stream_checksum(payload, union, u_live), axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
-    def hop(carry, _):
-        pl, acc = carry
+    def hop(carry, h):
+        pl, acc, ok = carry
         pl = lax.ppermute(pl, axis, perm)
-        return (pl, acc + pl), None
+        pl = ring_hop_tap(pl, h, site=tag)
+        if validation != "off":
+            ok = ok & integrity.check_stream(
+                pl, union, u_live, level=validation,
+                checksum=None if csums is None else csums[(idx - h) % n],
+                live_nonzero=False)
+        return (pl, acc + pl, ok), None
 
-    (_, acc), _ = lax.scan(hop, (payload, payload), jnp.arange(n - 1))
+    (_, acc, ok), _ = lax.scan(hop, (payload, payload, jnp.bool_(True)),
+                               jnp.arange(1, n))
     y = zebra_unpack_ref(acc, union, bs, bc)
 
-    u_live = jnp.sum(union.astype(jnp.int32))
     moved = ((n - 1) * stream_bytes(u_live, bs, bc, g2.dtype, nm * nk)
              ).astype(jnp.int32)
     dense = jnp.int32((n - 1) * M * K * item)
+    if validation != "off":
+        ok_ring = lax.psum(ok.astype(jnp.int32), axis) == n
+
+        def retry_dense():
+            jax.debug.callback(lambda t=tag: integrity.note_failure(t))
+            return lax.psum(g2, axis)
+
+        y = lax.cond(ok_ring, lambda: y, retry_dense)
+        moved = jnp.where(ok_ring, moved, moved + dense)
     return y, union, LinkBytes(moved, dense)
 
 
 def zebra_reduce_scatter(g2: jax.Array, axis, *, bs: int, bc: int,
-                         bitmap: jax.Array | None = None
+                         bitmap: jax.Array | None = None,
+                         validation: str = "off",
+                         site: str = "reduce_scatter"
                          ) -> tuple[jax.Array, LinkBytes]:
     """Reduce-scatter over block rows: psum in payload form, each device
     keeps its ``M // n`` row chunk (must be bs-aligned, so chunks never
@@ -307,7 +384,8 @@ def zebra_reduce_scatter(g2: jax.Array, axis, *, bs: int, bc: int,
             f"zebra_reduce_scatter: M={M} must divide into {n} bs-aligned "
             f"chunks (bs={bs}) — resolve_comms should have degraded")
     Ml = M // n
-    y, union, _ = zebra_psum_stream(g2, axis, bs=bs, bc=bc, bitmap=bitmap)
+    y, union, _ = zebra_psum_stream(g2, axis, bs=bs, bc=bc, bitmap=bitmap,
+                                    validation=validation, site=site)
     idx = lax.axis_index(axis)
     out = lax.dynamic_slice_in_dim(y, idx * Ml, Ml, axis=0)
 

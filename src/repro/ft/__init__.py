@@ -1,1 +1,21 @@
 from .supervisor import FTConfig, StepSupervisor, remesh_state  # noqa: F401
+from .faults import (  # noqa: F401
+    CorruptStream,
+    DeviceLoss,
+    FaultError,
+    PoisonBatch,
+    TransientStep,
+    classify,
+    policy_for,
+)
+from .inject import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    active_plan,
+    corrupt_file,
+    corrupt_map,
+    crashing_step,
+    inject,
+    ring_hop_tap,
+    stream_tap,
+)

@@ -1,0 +1,104 @@
+"""Failure taxonomy + per-class recovery policies.
+
+Every ingest boundary and the step supervisor route failures through ONE
+classification so "what went wrong" and "what to do about it" are decided
+in one place instead of per ``except`` clause:
+
+=================  =====================================================
+class              policy (``policy_for``)
+=================  =====================================================
+``CorruptStream``  ``recompute-dense`` — the (bitmap, payload) stream
+                   failed the wire contract (``compress.integrity``);
+                   re-request / recompute the map from its dense source
+                   (serve replaces the leaf with the dense cache, the
+                   engine and collectives re-run the dense path, restore
+                   walks back the checkpoint chain).
+``TransientStep``  ``restore-retry`` — a step failed for a reason that a
+                   restore + retry plausibly clears (preempted device,
+                   transient XLA error). The supervisor restores the
+                   newest verified checkpoint with exponential backoff.
+``PoisonBatch``    ``skip-batch`` — the *data* is bad (non-finite loss /
+                   gradients from one batch); restoring would replay the
+                   same batch into the same failure. Log it, skip it,
+                   keep the state.
+``DeviceLoss``     ``remesh`` — the device topology changed; the state
+                   must be re-sharded over the live devices
+                   (``ft.supervisor.remesh_state``) before stepping.
+=================  =====================================================
+
+Everything else — ``KeyboardInterrupt``, ``SystemExit``, assertion and
+programming errors — is *not* a fault: :func:`classify` returns ``None``
+and the supervisor re-raises. The old behavior (every ``Exception`` is
+retryable) turned typos into max_failures restore loops.
+"""
+from __future__ import annotations
+
+
+class FaultError(RuntimeError):
+    """Base of the classified failure taxonomy."""
+
+
+class CorruptStream(FaultError):
+    """A (bitmap, payload) stream failed the wire contract on ingest."""
+
+
+class TransientStep(FaultError):
+    """A step failure that restore + retry plausibly clears."""
+
+
+class PoisonBatch(FaultError):
+    """One batch produced non-finite loss/grads — skip it, keep state."""
+
+
+class DeviceLoss(FaultError):
+    """The device topology changed under the job."""
+
+
+POLICIES: dict[type, str] = {
+    CorruptStream: "recompute-dense",
+    TransientStep: "restore-retry",
+    PoisonBatch: "skip-batch",
+    DeviceLoss: "remesh",
+}
+
+# Exception text markers that identify a known transient-infrastructure
+# failure when the raiser didn't use the taxonomy (e.g. jaxlib's
+# XlaRuntimeError). Deliberately narrow: an unrecognized error is a bug
+# and must surface, not retry.
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "UNAVAILABLE", "DEADLINE_EXCEEDED",
+                     "ABORTED", "INTERNAL", "preempt", "socket closed",
+                     "connection reset")
+_POISON_MARKERS = ("nan", "non-finite", "not finite", "inf loss")
+
+
+def classify(exc: BaseException) -> type[FaultError] | None:
+    """Map an exception onto its fault class, or ``None`` for
+    "not a fault — re-raise". Explicit taxonomy instances win; known
+    infrastructure errors match by status marker; anything else
+    (including ``KeyboardInterrupt``/``SystemExit``, which are not even
+    ``Exception``s) is unclassified."""
+    if isinstance(exc, FaultError):
+        for cls in (CorruptStream, TransientStep, PoisonBatch, DeviceLoss):
+            if isinstance(exc, cls):
+                return cls
+        return TransientStep
+    if not isinstance(exc, Exception):
+        return None                      # KeyboardInterrupt / SystemExit
+    msg = f"{type(exc).__name__}: {exc}"
+    low = msg.lower()
+    if type(exc).__name__ == "XlaRuntimeError" or "jaxlib" in type(exc).__module__:
+        if any(m.lower() in low for m in _TRANSIENT_MARKERS):
+            return TransientStep
+    if isinstance(exc, FloatingPointError) or \
+            any(m in low for m in _POISON_MARKERS):
+        return PoisonBatch
+    if isinstance(exc, (RuntimeError, OSError, ConnectionError)) and \
+            any(m.lower() in low for m in _TRANSIENT_MARKERS):
+        return TransientStep
+    return None
+
+
+def policy_for(exc: BaseException) -> str | None:
+    """The recovery policy name for an exception, or ``None`` (re-raise)."""
+    cls = classify(exc)
+    return POLICIES[cls] if cls is not None else None

@@ -1,0 +1,271 @@
+"""Deterministic fault injection — the chaos harness behind the
+robustness claims.
+
+Faults are declared as data (:class:`Fault`), armed with
+:func:`inject`, and fire at *taps* compiled into the stream paths:
+
+* :func:`stream_tap` sits where the engine has the raw
+  ``(payload, bitmap, n_live)`` triple in hand (between the producer and
+  the validator), and corrupts it in-graph;
+* :func:`ring_hop_tap` sits inside the collectives' ring scan and zeroes
+  the payload arriving at one chosen hop;
+* :func:`corrupt_map` corrupts a concrete ``CompressedMap`` host-side
+  (serve's jit handoff, checkpointed activation maps);
+* :func:`corrupt_file` flips bytes in a checkpoint file on disk;
+* :func:`crashing_step` wraps a step function to raise at step N
+  (default :class:`~repro.ft.faults.TransientStep`; pass
+  ``DeviceLoss`` etc. to exercise the other supervisor policies).
+
+Everything is seedless-deterministic: a fault names its target position
+(``arg``) outright, so a test or bench run injects the SAME corruption
+every time — no flaky chaos.
+
+Trace-time binding
+------------------
+The in-graph taps consult the active plan when they are *traced*, and
+the corruption (or the identity) is baked into the jaxpr. With no plan
+armed a tap adds literally nothing to the graph — the ``validation="off"``
+hot path stays byte-identical. The flip side: do not reuse a function
+jitted *outside* an :func:`inject` context *inside* one (or vice versa) —
+jit caches don't key on the plan. The chaos tests build their jitted
+functions inside the context (or run eagerly).
+
+Fault kinds over one stream (all detected by ``compress.integrity``):
+
+=============  ==========================================================
+``bitflip``    flip bitmap bit ``arg`` (popcount no longer matches
+               ``n_live`` — and the consumer slot map would shift)
+``truncate``   zero the last live payload slot (a cut-short transfer;
+               live-slot-nonzero invariant)
+``nan``        poison one element of live slot ``arg`` with NaN
+``value``      add 1.0 to one element of live slot ``arg`` — still
+               finite and nonzero, so ONLY the checksum level sees it
+``count``      ``n_live += 1`` (corrupt counter; popcount mismatch)
+``drop_hop``   zero the payload arriving at ring hop ``arg``
+               (:func:`ring_hop_tap` only)
+``crash``      raise from the step function at step ``arg``
+               (:func:`crashing_step` only)
+=============  ==========================================================
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .faults import TransientStep
+
+STREAM_KINDS = ("bitflip", "truncate", "nan", "value", "count")
+HOP_KINDS = ("drop_hop",)
+
+
+@dataclasses.dataclass
+class Fault:
+    """One declared fault. ``site`` matches the tap's site label
+    (``"*"`` = any tap); ``arg`` picks the position (bit index, live
+    slot, ring hop, step number); ``times`` is how many taps it fires at
+    (-1 = every matching tap)."""
+    kind: str
+    site: str = "*"
+    arg: int = 0
+    times: int = 1
+
+
+class FaultPlan:
+    """The armed set of faults plus the record of what actually fired.
+    ``injected`` is the ground truth the chaos tests compare against
+    ``integrity.failures()`` — detection must be 1:1 with injection."""
+
+    def __init__(self, faults: list[Fault]):
+        self.faults = list(faults)
+        self._remaining = [f.times for f in self.faults]
+        self.injected: list[tuple[str, str]] = []
+
+    def take(self, kinds: tuple[str, ...], site: str) -> Fault | None:
+        """Consume (at trace time) the first live fault matching this
+        tap, or None."""
+        for i, f in enumerate(self.faults):
+            if f.kind not in kinds or self._remaining[i] == 0:
+                continue
+            if f.site != "*" and f.site != site:
+                continue
+            if self._remaining[i] > 0:
+                self._remaining[i] -= 1
+            return f
+        return None
+
+    def note(self, kind: str, site: str) -> None:
+        self.injected.append((kind, site))
+
+
+_ACTIVE: contextvars.ContextVar[FaultPlan | None] = \
+    contextvars.ContextVar("repro_fault_plan", default=None)
+
+
+def active_plan() -> FaultPlan | None:
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def inject(*faults: Fault) -> Iterator[FaultPlan]:
+    """Arm a fault plan for the dynamic extent of the block."""
+    plan = FaultPlan(list(faults))
+    tok = _ACTIVE.set(plan)
+    try:
+        yield plan
+    finally:
+        _ACTIVE.reset(tok)
+
+
+# ---------------------------------------------------------------------------
+# In-graph corruption
+# ---------------------------------------------------------------------------
+
+def _corrupt_stream(payload: jax.Array, bitmap: jax.Array, n_live: jax.Array,
+                    kind: str, arg: int):
+    """Apply one fault kind to a traced (payload, bitmap, n_live) triple.
+    Every corruption is guarded to actually *bite* (a NaN written into a
+    dead slot would be invisible — and would falsely fail the
+    detected-iff-injected assertion)."""
+    nb = payload.shape[0]
+    nl = jnp.asarray(n_live).astype(jnp.int32)
+    if kind == "bitflip":
+        flat = bitmap.reshape(-1)
+        pos = int(arg) % flat.shape[0]
+        flipped = (1 - flat[pos].astype(jnp.int32)).astype(flat.dtype)
+        bitmap = flat.at[pos].set(flipped).reshape(bitmap.shape)
+    elif kind == "count":
+        n_live = nl + 1
+    elif kind == "truncate":
+        last = jnp.maximum(nl - 1, 0)
+        dead = jnp.arange(nb, dtype=jnp.int32)[:, None, None] == last
+        payload = jnp.where(dead & (nl > 0), jnp.zeros_like(payload), payload)
+    elif kind in ("nan", "value"):
+        slot = jnp.where(nl > 0, jnp.minimum(jnp.int32(arg), nl - 1),
+                         jnp.int32(0))
+        bad = (jnp.full((), jnp.nan, payload.dtype) if kind == "nan"
+               else payload[slot, 0, 0] + jnp.asarray(1.0, payload.dtype))
+        payload = payload.at[slot, 0, 0].set(
+            jnp.where(nl > 0, bad, payload[slot, 0, 0]))
+    else:
+        raise ValueError(f"unknown stream fault kind {kind!r}")
+    return payload, bitmap, n_live
+
+
+def stream_tap(payload: jax.Array, bitmap: jax.Array, n_live: jax.Array,
+               *, site: str):
+    """Corruption point for one in-flight stream. Identity (and adds
+    nothing to the graph) unless a matching fault is armed."""
+    plan = active_plan()
+    if plan is None:
+        return payload, bitmap, n_live
+    applied: set[int] = set()
+    while True:
+        f = plan.take(STREAM_KINDS, site)
+        # each armed fault fires at most once per tap invocation — a
+        # times=-1 (every-tap) fault is returned by take() forever, and
+        # re-corrupting the same position is a no-op loop, not a fault
+        if f is None or id(f) in applied:
+            return payload, bitmap, n_live
+        applied.add(id(f))
+        payload, bitmap, n_live = _corrupt_stream(
+            payload, bitmap, n_live, f.kind, f.arg)
+        plan.note(f.kind, site)
+
+
+def ring_hop_tap(payload: jax.Array, hop: jax.Array, *, site: str
+                 ) -> jax.Array:
+    """Corruption point inside a ring scan: zero the payload arriving at
+    hop ``arg`` (1-based, matching the collectives' hop numbering).
+    ``hop`` is traced — the tap is traced once for the whole scan and
+    the ``where`` selects the hop."""
+    plan = active_plan()
+    if plan is None:
+        return payload
+    f = plan.take(HOP_KINDS, site)
+    if f is None:
+        return payload
+    plan.note(f.kind, site)
+    return jnp.where(jnp.asarray(hop).astype(jnp.int32) == jnp.int32(f.arg),
+                     jnp.zeros_like(payload), payload)
+
+
+# ---------------------------------------------------------------------------
+# Host-side corruption (concrete maps / files)
+# ---------------------------------------------------------------------------
+
+def corrupt_map(cm: Any, kind: str, *, arg: int = 0) -> Any:
+    """Return a corrupted copy of a concrete ``CompressedMap`` — the
+    serve-handoff / checkpoint-restore chaos path. Same kinds and
+    semantics as :func:`stream_tap` (checksum is carried over UNCHANGED —
+    corrupting the stream must break the match, not re-sign it)."""
+    from ..compress.stream import pack_bitmap, unpack_bitmap
+    payload = np.array(cm.payload)
+    n_live = int(np.asarray(cm.n_live))
+    nm, nk = cm.m // cm.bs, cm.k // cm.bc
+    if kind == "bitflip":
+        bitmap = np.array(unpack_bitmap(jnp.asarray(cm.index), nm, nk))
+        flat = bitmap.reshape(-1)
+        pos = int(arg) % flat.size
+        flat[pos] = 1 - int(flat[pos])
+        index = np.asarray(pack_bitmap(jnp.asarray(bitmap)))
+        return dataclasses.replace(cm, index=jnp.asarray(index))
+    if kind == "count":
+        return dataclasses.replace(cm, n_live=jnp.int32(n_live + 1))
+    if kind == "truncate":
+        if n_live > 0:
+            payload[n_live - 1] = 0
+        return dataclasses.replace(cm, payload=jnp.asarray(payload))
+    if kind in ("nan", "value"):
+        if n_live > 0:
+            slot = min(int(arg), n_live - 1)
+            val = (np.nan if kind == "nan"
+                   else np.float32(payload[slot, 0, 0]) + np.float32(1.0))
+            payload[slot, 0, 0] = np.asarray(val, payload.dtype)
+        return dataclasses.replace(cm, payload=jnp.asarray(payload))
+    raise ValueError(f"unknown map fault kind {kind!r}")
+
+
+def corrupt_file(path: str, *, offset: int | None = None) -> None:
+    """Flip one byte of a file in place (checkpoint-corruption chaos).
+    Default offset: the middle of the file — past any header, inside the
+    array data."""
+    with open(path, "r+b") as f:
+        f.seek(0, 2)
+        size = f.tell()
+        if size == 0:
+            return
+        pos = size // 2 if offset is None else int(offset) % size
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+# ---------------------------------------------------------------------------
+# Step-level faults
+# ---------------------------------------------------------------------------
+
+def crashing_step(step_fn: Callable, crash_at: int,
+                  exc: Callable[[], BaseException] | None = None,
+                  times: int = 1) -> Callable:
+    """Wrap a step function to raise at its ``crash_at``-th call
+    (1-based), ``times`` times total. Default exception:
+    ``TransientStep`` — the restore-retry supervisor policy."""
+    make = exc or (lambda: TransientStep(f"injected crash at call {crash_at}"))
+    calls = {"n": 0, "raised": 0}
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] >= crash_at and calls["raised"] < times:
+            calls["raised"] += 1
+            raise make()
+        return step_fn(*a, **kw)
+
+    wrapped.calls = calls  # type: ignore[attr-defined]
+    return wrapped

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from collections import deque
@@ -27,6 +28,10 @@ import jax
 import numpy as np
 
 from ..checkpoint import CheckpointManager
+from . import faults as ft_faults
+from .faults import DeviceLoss, PoisonBatch
+
+_log = logging.getLogger("repro.ft")
 
 
 @dataclasses.dataclass
@@ -38,6 +43,15 @@ class FTConfig:
     straggler_window: int = 20
     straggler_zscore: float = 4.0
     max_failures: int = 3
+    failure_decay_steps: int = 25      # consecutive successes that forgive
+                                       # one recorded failure — a long job
+                                       # with rare transient faults never
+                                       # exhausts max_failures
+    backoff_base_s: float = 0.05       # restore backoff: base * 2**(k-1),
+    backoff_cap_s: float = 2.0         # capped, +- jitter
+    backoff_jitter: float = 0.25       # fraction of the delay randomized
+    max_poison_skips: int = 3          # consecutive poison batches before
+                                       # the job is declared sick (re-raise)
 
 
 class StepSupervisor:
@@ -48,6 +62,10 @@ class StepSupervisor:
         self.times: deque[float] = deque(maxlen=cfg.straggler_window)
         self.straggler_events: list[dict] = []
         self.failures = 0
+        self.failure_log: list[dict] = []
+        self.skipped_batches: list[dict] = []
+        self._rng = np.random.default_rng(0)   # jitter only — deterministic
+                                               # runs stay deterministic
 
     # ------------------------------------------------------------------
     def resume_or_init(self, init_fn: Callable[[], Any], like: Any | None = None):
@@ -68,42 +86,119 @@ class StepSupervisor:
         os.replace(tmp, self.hb_path)
 
     def check_straggler(self, dt: float) -> bool:
-        """True if this step is a straggler vs the trailing window."""
+        """True if this step is a straggler vs the trailing window.
+
+        The straggler's dt still enters the window: excluding it meant a
+        genuine sustained slowdown (new neighbor, thermal throttle) was
+        compared against the stale fast window forever — every step
+        flagged, the detector never re-baselined."""
+        flagged = False
         if len(self.times) >= self.cfg.straggler_window // 2:
             mu = float(np.mean(self.times))
             sd = float(np.std(self.times)) + 1e-9
             if (dt - mu) / sd > self.cfg.straggler_zscore and dt > 1.5 * mu:
                 self.straggler_events.append(
                     {"dt": dt, "mean": mu, "std": sd, "time": time.time()})
-                return True
+                flagged = True
         self.times.append(dt)
-        return False
+        return flagged
 
     # ------------------------------------------------------------------
+    def _backoff(self) -> float:
+        """Exponential backoff with jitter for the k-th restore since the
+        last forgiven failure — herd restarts after a shared-infra blip
+        must not re-stampede the same resource in lockstep."""
+        k = max(self.failures, 1)
+        base = min(self.cfg.backoff_base_s * (2.0 ** (k - 1)),
+                   self.cfg.backoff_cap_s)
+        jit = 1.0 + self.cfg.backoff_jitter * (2.0 * self._rng.random() - 1.0)
+        return max(base * jit, 0.0)
+
     def run(self, state, step_fn: Callable, data_iter, steps: int,
             start_step: int = 0, loader_state_fn=None,
-            on_metrics: Callable | None = None):
+            on_metrics: Callable | None = None,
+            on_device_loss: Callable | None = None):
         """The supervised loop: step -> heartbeat -> (ckpt) -> straggler
-        check. Exceptions restore the last checkpoint (up to max_failures)."""
+        check. Failures route through the ``ft.faults`` taxonomy:
+
+        * unclassified exceptions (typos, ``KeyboardInterrupt``) re-raise
+          immediately — they are bugs, not faults;
+        * ``PoisonBatch`` (incl. an in-band non-finite loss) skips the
+          batch with a log entry and KEEPS the state — a restore would
+          replay the same batch into the same failure;
+        * ``DeviceLoss`` calls ``on_device_loss(state) -> state`` (the
+          caller's remesh hook) and retries the same step, else re-raises;
+        * everything else (``TransientStep``/``CorruptStream``) restores
+          the newest verified checkpoint after an exponential backoff
+          with jitter, up to ``max_failures``.
+
+        ``failures`` decays by one per ``failure_decay_steps`` consecutive
+        successes, so a week-long job with an occasional blip never
+        exhausts the budget that exists to catch crash loops."""
         step = start_step
+        streak = 0
+        poison_run = 0
         while step < steps:
             batch = next(data_iter)
             t0 = time.time()
             try:
-                state, metrics = step_fn(state, batch)
+                new_state, metrics = step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
-            except Exception:  # noqa: BLE001 — node-failure path
+                loss = float(np.asarray(metrics["loss"]))
+                if not np.isfinite(loss):
+                    raise PoisonBatch(f"non-finite loss {loss} at step {step}")
+                state = new_state  # commit only on a finite loss — a poison
+                                   # batch's update is discarded, not kept
+            except Exception as e:  # noqa: BLE001 — classified below
+                cls = ft_faults.classify(e)
+                if cls is None:
+                    raise              # a bug, not a fault
+                policy = ft_faults.POLICIES[cls]
+                self.failure_log.append(
+                    {"step": step, "class": cls.__name__, "policy": policy,
+                     "error": f"{type(e).__name__}: {e}", "time": time.time()})
+                if cls is PoisonBatch:
+                    poison_run += 1
+                    self.skipped_batches.append(
+                        {"step": step, "error": str(e)})
+                    _log.warning("poison batch at step %d skipped (%s) — "
+                                 "state kept, %d/%d consecutive",
+                                 step, e, poison_run,
+                                 self.cfg.max_poison_skips)
+                    if poison_run > self.cfg.max_poison_skips:
+                        raise          # every batch is poison: data is sick
+                    step += 1          # the batch is consumed; the step is
+                    continue           # a logged no-op, not a retry loop
+                if cls is DeviceLoss and on_device_loss is not None:
+                    _log.warning("device loss at step %d: re-meshing (%s)",
+                                 step, e)
+                    state = on_device_loss(state)
+                    streak = 0
+                    continue           # retry the step on the new mesh
                 self.failures += 1
+                streak = 0
                 self.ckpt.wait()   # an in-flight async save may be the newest
                                    # restore point — land it before deciding
-                if self.failures > self.cfg.max_failures or self.ckpt.latest_step() is None:
+                if self.failures > self.cfg.max_failures or \
+                        self.ckpt.latest_step() is None:
                     raise
+                delay = self._backoff()
+                _log.warning("%s at step %d (%s): restoring after %.2fs "
+                             "(failure %d/%d)", cls.__name__, step, e, delay,
+                             self.failures, self.cfg.max_failures)
+                if delay:
+                    time.sleep(delay)
                 step, state, extra = self.ckpt.restore(state)
                 if loader_state_fn:
                     data_iter.restore(extra.get("loader_step", step))
                 continue
             dt = time.time() - t0
             step += 1
+            poison_run = 0
+            streak += 1
+            if self.failures > 0 and streak >= self.cfg.failure_decay_steps:
+                self.failures -= 1
+                streak = 0
             self.check_straggler(dt)
             if step % 10 == 0 or step == steps:
                 self.heartbeat(step, metrics)

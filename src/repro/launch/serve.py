@@ -41,13 +41,21 @@ def main() -> None:
                     help="Zebra site-engine backend for every activation "
                          "site (core.engine); stream/fused also transport "
                          "the prefill->decode KV caches compressed")
+    ap.add_argument("--validate", default="off",
+                    choices=["off", "structural", "checksum"],
+                    help="stream-integrity level at every ingest boundary "
+                         "(compress.integrity): the engine's in-graph "
+                         "producer->consumer checks plus host-side "
+                         "validation of the prefill->decode cache handoff "
+                         "with per-leaf dense-recompute fallback")
     args = ap.parse_args()
 
     backend = args.backend or ("stream" if args.use_kernel else "")
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     cfg = cfg.replace(param_dtype="bfloat16",
                       zebra_sites=tuple(cfg.zebra_sites) + ("kv_cache",),
-                      zebra_t_obj=args.t_obj, zebra_backend=backend)
+                      zebra_t_obj=args.t_obj, zebra_backend=backend,
+                      zebra_validation=args.validate)
     mesh = make_host_mesh(model=args.model_parallel)
     model = LM(cfg)
 
@@ -87,7 +95,8 @@ def main() -> None:
     zebra_zero_frac = float(aux.zero_frac)
     measured_bytes = float(aux.measured_bytes_exact())  # exact past 16 MiB
     if backend in ("stream", "fused"):
-        state = transport_state_compressed(state, cfg)
+        state = transport_state_compressed(state, cfg,
+                                           validation=args.validate)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
 
     t0 = time.time()
@@ -116,7 +125,47 @@ def main() -> None:
 _SPOT_CHECK = itertools.count()        # rotates the sampled leaf per call
 
 
-def transport_state_compressed(state, cfg, sample_leaf: int | None = None):
+def validate_state_ingest(cstate, dense_state, level: str,
+                          site: str = "serve"):
+    """Validate every ``CompressedMap`` leaf of a handoff tree at the
+    consumer boundary; a corrupt leaf is replaced by its dense source
+    (the ``ft.faults`` "recompute-dense" policy, applied per leaf) so one
+    bad stream degrades ONE cache's transport instead of failing the
+    batch. An armed chaos plan (``ft.inject``) with a stream fault at
+    ``site`` corrupts leaves here — after compression, before
+    validation — exercising the real ingest path. Returns
+    ``(tree, n_recovered)``."""
+    from ..compress import CompressedMap
+    from ..compress.integrity import validate_map
+    from ..ft.faults import CorruptStream
+    from ..ft.inject import STREAM_KINDS, active_plan, corrupt_map
+
+    is_cm = lambda l: isinstance(l, CompressedMap)
+    dense_leaves = jax.tree_util.tree_leaves(dense_state)
+    c_leaves, treedef = jax.tree_util.tree_flatten(cstate, is_leaf=is_cm)
+    plan = active_plan()
+    out, n_bad = [], 0
+    for i, (d, c) in enumerate(zip(dense_leaves, c_leaves)):
+        if not is_cm(c):
+            out.append(c)
+            continue
+        if plan is not None:
+            f = plan.take(STREAM_KINDS, site)
+            if f is not None:
+                c = corrupt_map(c, f.kind, arg=f.arg)
+                plan.note(f.kind, site)
+        try:
+            validate_map(c, level=level, site=f"{site}:leaf{i}")
+            out.append(c)
+        except CorruptStream as e:
+            n_bad += 1
+            print(f"[serve] {e} — leaf {i} recovered from its dense source")
+            out.append(d)
+    return jax.tree_util.tree_unflatten(treedef, out), n_bad
+
+
+def transport_state_compressed(state, cfg, sample_leaf: int | None = None,
+                               validation: str = "off"):
     """The prefill -> decode handoff in compressed stream form: pack every
     compatible cache leaf (lossless nonzero-block bitmap), count the bytes
     actually moved, reconcile against Eq. 2/3, and hand the caches to the
@@ -135,7 +184,8 @@ def transport_state_compressed(state, cfg, sample_leaf: int | None = None):
     caches, enc_out = state
     meter = BandwidthMeter()
     ccaches = compress_tree(caches, bs=cfg.zebra_block_seq,
-                            bc=cfg.zebra_block_ch, meter=meter, site="kv")
+                            bc=cfg.zebra_block_ch, meter=meter, site="kv",
+                            checksum=(validation == "checksum"))
     is_cm = lambda l: isinstance(l, CompressedMap)
     sampled = [(a, c) for a, c in zip(
         jax.tree_util.tree_leaves(caches),
@@ -161,6 +211,10 @@ def transport_state_compressed(state, cfg, sample_leaf: int | None = None):
         print("  WARNING: no cache leaf was block-divisible — every leaf "
               "moved dense; pick batch/prompt-len/gen so that "
               "batch*(prompt+gen) divides by zebra_block_seq")
+    if validation != "off":
+        (ccaches, n_bad) = validate_state_ingest(ccaches, caches, validation)
+        print(f"  ingest validation ({validation}): "
+              f"{'clean' if n_bad == 0 else f'{n_bad} leaf(s) recovered dense'}")
     return ccaches, enc_out
 
 

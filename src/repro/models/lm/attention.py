@@ -267,7 +267,9 @@ def gather_kv_shards(k: jax.Array, v: jax.Array, zc) -> tuple[jax.Array, jax.Arr
                             layout="tokens")
         if comms == "compressed":
             g, link = coll.zebra_all_gather(tz.reshape(B * S, D), axis,
-                                            bs=bs, bc=bc)
+                                            bs=bs, bc=bc,
+                                            validation=zc.validation,
+                                            site="kv_cache")
             full = (g.reshape(n, B, S, D).transpose(1, 0, 2, 3)
                     .reshape(B, n * S, Hkv, hd))
             sa = coll.attach_link(sa, link)

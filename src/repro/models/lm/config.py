@@ -87,6 +87,11 @@ class LMConfig:
                                      # matched) training, which the kernel
                                      # backends serve through custom_vjp —
                                      # tnet sites always resolve to reference
+    zebra_validation: str = "off"    # stream-integrity level at every
+                                     # boundary that ingests a (bitmap,
+                                     # payload) stream: off | structural |
+                                     # checksum (ZebraConfig.validation /
+                                     # compress.integrity)
 
     def __post_init__(self):
         if self.head_dim == 0:

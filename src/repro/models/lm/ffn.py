@@ -22,7 +22,8 @@ def zebra_cfg_for(cfg: LMConfig, mode: str) -> ZebraConfig:
     return ZebraConfig(enabled=cfg.zebra_enabled, t_obj=cfg.zebra_t_obj,
                        block_seq=cfg.zebra_block_seq, block_ch=cfg.zebra_block_ch,
                        mode=mode, backend=backend, use_tnet=cfg.zebra_tnet,
-                       site_backends=tuple(cfg.zebra_site_backends))
+                       site_backends=tuple(cfg.zebra_site_backends),
+                       validation=cfg.zebra_validation)
 
 
 def eff_block_ch(f: int, cfg: LMConfig) -> int:
@@ -128,7 +129,9 @@ def ffn_layer_out_exchange(y, cfg: LMConfig, mode: str):
     yz, sa = zebra_site(y, zc, site="layer_out")
     if comms == "compressed":
         g, link = coll.zebra_all_gather(yz.reshape(B * S, d), axis,
-                                        bs=bs, bc=bc)
+                                        bs=bs, bc=bc,
+                                        validation=zc.validation,
+                                        site="layer_out")
         y_full = (g.reshape(n, B, S, d).transpose(1, 0, 2, 3)
                   .reshape(B, n * S, d))
         sa = coll.attach_link(sa, link)

@@ -20,7 +20,9 @@ class FlakyStep:
         self.calls += 1
         step = int(state["step"])
         if step == self.fail_at and self.calls == self.fail_at + 1:
-            raise RuntimeError("simulated device failure")
+            # matches the taxonomy's transient-preemption marker — a bare
+            # unclassifiable exception would (correctly) re-raise now
+            raise RuntimeError("simulated preemption: device failure")
         new = {"w": state["w"] + batch.mean(), "step": state["step"] + 1}
         return new, {"loss": jnp.float32(1.0 / (step + 1))}
 
