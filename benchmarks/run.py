@@ -38,13 +38,13 @@ def main() -> None:
                          "root (perf-trajectory artifacts)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "kernels,roofline,bandwidth,train")
+                         "kernels,roofline,bandwidth,train,serve")
     args = ap.parse_args()
 
     # importing every bench module IS the smoke import-check
-    from . import (bandwidth_bench, kernel_bench, roofline, table1_zero_blocks,
-                   table2_cifar, table3_tinyimagenet, table4_ablation,
-                   table5_overhead, train_bench)
+    from . import (bandwidth_bench, kernel_bench, roofline, serve_bench,
+                   table1_zero_blocks, table2_cifar, table3_tinyimagenet,
+                   table4_ablation, table5_overhead, train_bench)
     from .common import FULL, QUICK, set_json_dir
 
     if args.json:
@@ -62,6 +62,9 @@ def main() -> None:
         "table4": lambda: table4_ablation.run(budget, quick),
         "bandwidth": lambda: bandwidth_bench.run(smoke=quick or args.smoke),
         "train": lambda: train_bench.run(budget, quick),
+        # NOT in SMOKE_BENCHES: the serving loop is a multi-second
+        # end-to-end trace — ci.sh runs it as its own shard
+        "serve": lambda: serve_bench.run(8 if quick else 24),
     }
     if args.only:
         only = args.only.split(",")

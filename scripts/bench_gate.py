@@ -52,9 +52,10 @@ import os
 import sys
 
 FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json",
-         "BENCH_collectives.json", "BENCH_faults.json")
+         "BENCH_collectives.json", "BENCH_faults.json", "BENCH_serve.json")
 EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes",
-              "ici_bytes", "ici_dense_bytes", "ici_predicted_bytes")
+              "ici_bytes", "ici_dense_bytes", "ici_predicted_bytes",
+              "kv_bytes_measured", "kv_bytes_dense", "kv_pages")
 US_EXEMPT_BELOW = 50.0
 
 # rows of the fresh BENCH_kernels.json that must beat dense (the
@@ -246,6 +247,76 @@ def gate_faults(fresh_path: str) -> list[str]:
     return errors
 
 
+def gate_serve(fresh_path: str) -> list[str]:
+    """Absolute acceptance check on the fresh serving artifact (no
+    baseline involvement): the continuous-batching row must beat the
+    sequential baseline by >= 2x requests/s, its measured KV stream
+    bytes must reconcile with the Eq. 2/3 prediction within the per-page
+    index-padding bound (kv_pages * 2 B: 1 B padding + 1 B float
+    roundoff per page) while staying strictly below dense, the pool's
+    zero-block fraction must sit in a wide band around the paper's 0.64
+    operating point, and the decode dispatch-shape count must respect
+    the engine's declared ladder bound. A missing artifact is fine (the
+    serve shard may not have run); a present artifact without the
+    continuous row is a failure."""
+    if not os.path.exists(fresh_path):
+        print("bench_gate: no fresh BENCH_serve.json — skipping the "
+              "continuous-batching acceptance check (serve shard not run)")
+        return []
+    try:
+        fresh = _rows(fresh_path)
+    except (json.JSONDecodeError, KeyError):
+        return [f"{os.path.basename(fresh_path)}: unreadable — cannot check "
+                f"the serving acceptance rows"]
+    errors = []
+    r = fresh.get("serve/continuous")
+    if r is None:
+        return [f"{os.path.basename(fresh_path)}: serve/continuous row "
+                f"missing — the bench emitted nothing to accept"]
+    need = ("speedup_vs_sequential", "kv_bytes_measured",
+            "kv_bytes_predicted", "kv_bytes_dense", "kv_pages",
+            "zero_frac", "decode_shapes", "decode_shape_bound")
+    missing = [k for k in need if k not in r]
+    if missing:
+        return [f"serve/continuous: columns missing: {missing}"]
+    if "serve/sequential" not in fresh:
+        errors.append("serve/sequential baseline row missing — the speedup "
+                      "has nothing it was measured against")
+    s = float(r["speedup_vs_sequential"])
+    if not s >= 2.0:
+        errors.append(
+            f"serve/continuous: speedup_vs_sequential = {s:g} < 2.0 — "
+            f"continuous batching is not paying for itself over "
+            f"one-request-at-a-time serving")
+    meas, pred = int(r["kv_bytes_measured"]), float(r["kv_bytes_predicted"])
+    dense, pages = int(r["kv_bytes_dense"]), int(r["kv_pages"])
+    if pages < 1:
+        errors.append("serve/continuous: kv_pages = 0 — no KV traffic rode "
+                      "the compressed pool")
+    if abs(meas - pred) > pages * 2.0:
+        errors.append(
+            f"serve/continuous: |kv_bytes_measured {meas} - predicted "
+            f"{pred:g}| > {pages} pages x 2 B — the per-request stream "
+            f"bytes left the Eq. 2/3 index-padding bound")
+    if not meas < dense:
+        errors.append(
+            f"serve/continuous: kv_bytes_measured {meas} >= dense {dense} — "
+            f"paging through the pool moved no fewer bytes than dense at "
+            f"zero_frac {r.get('zero_frac', '?')}")
+    zf = float(r["zero_frac"])
+    if not 0.40 <= zf <= 0.90:
+        errors.append(
+            f"serve/continuous: zero_frac = {zf:g} outside [0.40, 0.90] — "
+            f"the trace is not at the paper's ~64%-zeros operating point "
+            f"(recalibrate T_OBJ in benchmarks/serve_bench.py)")
+    if int(r["decode_shapes"]) > int(r["decode_shape_bound"]):
+        errors.append(
+            f"serve/continuous: decode_shapes {r['decode_shapes']} > bound "
+            f"{r['decode_shape_bound']} — the hot path compiled shapes "
+            f"outside the declared ladder")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -309,6 +380,17 @@ def main() -> None:
               f"recovered on every detect row -> "
               f"{'FAIL' if faults_errs else 'ok'}")
     all_errors.extend(faults_errs)
+
+    # absolute serving acceptance (baseline-independent): continuous
+    # batching >= 2x sequential, per-request KV bytes inside the Eq. 2/3
+    # index-padding bound, bounded decode dispatch shapes
+    serve_path = os.path.join(args.fresh, "BENCH_serve.json")
+    serve_errs = gate_serve(serve_path)
+    if os.path.exists(serve_path):
+        print(f"bench_gate: BENCH_serve.json speedup >= 2x and KV bytes "
+              f"within the index-padding bound -> "
+              f"{'FAIL' if serve_errs else 'ok'}")
+    all_errors.extend(serve_errs)
 
     if all_errors:
         print("\nbench_gate FAILED:", file=sys.stderr)

@@ -12,7 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # trajectory, not ratchet against their own previous output. Falls back to
 # the working-tree copy outside a git checkout.
 mkdir -p .bench-baseline
-for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json BENCH_faults.json; do
+for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json BENCH_faults.json BENCH_serve.json; do
     if ! git show "HEAD:$f" > ".bench-baseline/$f" 2>/dev/null; then
         # a failed `git show` leaves a truncated file — replace it with
         # the working-tree copy, or remove it so the gate's first-run
@@ -87,6 +87,48 @@ if not need <= bounds:
              f"{sorted(need - bounds)}")
 print(f"  BENCH_faults.json: {len(detect)} detect rows across boundaries "
       f"{sorted(bounds)}, overhead at levels {sorted(levels)} OK")
+EOF
+
+# -- serving shard: continuous batching vs the sequential baseline over
+# the paged compressed-KV pool. Multi-second end-to-end loop, so it runs
+# standalone like the collectives/faults shards rather than inside the
+# shared smoke runner.
+echo "== serving shard (continuous batching): serve bench =="
+python -m benchmarks.serve_bench --smoke --json
+
+echo "== BENCH_serve.json schema + serving-contract columns =="
+python - <<'EOF'
+import json, sys
+try:
+    with open("BENCH_serve.json") as f:
+        doc = json.load(f)
+except FileNotFoundError:
+    sys.exit("FAIL: BENCH_serve.json missing (serve_bench --json did "
+             "not write it)")
+except json.JSONDecodeError as e:
+    sys.exit(f"FAIL: BENCH_serve.json is not valid JSON: {e}")
+for key in ("bench", "schema_version", "generated_unix", "rows"):
+    if key not in doc:
+        sys.exit(f"FAIL: BENCH_serve.json missing key {key!r}")
+rows = {r["name"]: r for r in doc["rows"]}
+for name in ("serve/continuous", "serve/sequential"):
+    if name not in rows:
+        sys.exit(f"FAIL: BENCH_serve.json missing row {name}")
+cont = rows["serve/continuous"]
+for k in ("us_per_call", "requests_per_s", "tokens_per_s",
+          "speedup_vs_sequential", "p50_token_ms", "p95_token_ms",
+          "kv_bytes_measured", "kv_bytes_predicted", "kv_bytes_dense",
+          "kv_pages", "zero_frac", "decode_shapes", "decode_shape_bound"):
+    if not isinstance(cont.get(k), (int, float)):
+        sys.exit(f"FAIL: serve/continuous missing numeric column {k!r}: "
+                 f"{cont.get(k)!r}")
+if "speedup_vs_sequential" in rows["serve/sequential"]:
+    sys.exit("FAIL: the sequential baseline row must not carry a "
+             "speedup_vs_sequential column (it IS the denominator)")
+print(f"  BENCH_serve.json: {len(rows)} rows, continuous at "
+      f"{cont['requests_per_s']} req/s "
+      f"({cont['speedup_vs_sequential']}x sequential), zero_frac "
+      f"{cont['zero_frac']} OK")
 EOF
 
 echo "== BENCH_collectives.json schema + byte-contract columns =="

@@ -1,8 +1,16 @@
-"""Batched serving launcher: prefill a batch of prompts, then decode with
-the sharded KV cache (+ Zebra KV-cache block compression accounting).
+"""Serving launcher — a thin CLI over two paths:
+
+* one-shot batch (default): prefill a batch of prompts, then decode with
+  the sharded KV cache (+ Zebra KV-cache block compression accounting);
+* continuous batching (``--requests N``): serve a synthetic
+  heavy-traffic trace through ``repro.serve.ServeEngine`` — request
+  admission, slotted decode across in-flight requests at different
+  positions, and a paged pool of compressed KV payload slabs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
         --batch 4 --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
+        --requests 16 --slots 8 --gen 24 --validate structural
 """
 from __future__ import annotations
 
@@ -19,8 +27,9 @@ from .. import configs
 from ..data import LMDatasetConfig, lm_batch
 from ..distributed import sharding as shd
 from ..models.lm import LM
+from ..serve.bucket import pow2_bucket, pow2_ceil
 from .mesh import make_host_mesh
-from .steps import make_generate, make_prefill
+from .steps import _next_token, make_generate, make_prefill
 
 
 def main() -> None:
@@ -32,7 +41,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--t-obj", type=float, default=0.1)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax; > 0 samples from the softmax "
+                         "at this temperature (seeded by --seed)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="legacy alias for --backend stream (compressed "
                          "activation transport + measured-bytes accounting)")
@@ -45,9 +57,22 @@ def main() -> None:
                     choices=["off", "structural", "checksum"],
                     help="stream-integrity level at every ingest boundary "
                          "(compress.integrity): the engine's in-graph "
-                         "producer->consumer checks plus host-side "
-                         "validation of the prefill->decode cache handoff "
-                         "with per-leaf dense-recompute fallback")
+                         "producer->consumer checks, host-side validation "
+                         "of the prefill->decode cache handoff, and the "
+                         "serve pool's per-page ingest check with dense "
+                         "fallback")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous-batching mode: serve a synthetic "
+                         "trace of N requests (repro.serve.ServeEngine) "
+                         "instead of the one-shot batch path")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="in-flight request lanes (continuous mode)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="cache positions per compressed KV page")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="evict a lane to the compressed pool after this "
+                         "many consecutive steps while requests wait "
+                         "(0 = never)")
     args = ap.parse_args()
 
     backend = args.backend or ("stream" if args.use_kernel else "")
@@ -65,13 +90,18 @@ def main() -> None:
         shd.param_specs(params, cfg, mesh), is_leaf=lambda x: isinstance(x, P))
     params = jax.device_put(params, pshard)
 
+    if args.requests:
+        return serve_continuous(args, cfg, mesh, model, params)
+
+    key = jax.random.PRNGKey(args.seed)
     prefill = jax.jit(make_prefill(model, mesh), static_argnames=())
     # whole-generation lax.scan: ONE dispatch for gen-1 tokens (steps.py);
     # length-0 scan at --gen 1 costs nothing. With a compressed handoff the
     # state arrives in payload form, whose buffers can't back the dense
     # outputs — donating them would only warn.
     donate = () if backend in ("stream", "fused") else (2,)
-    generate = jax.jit(make_generate(model, mesh, max(args.gen - 1, 0)),
+    generate = jax.jit(make_generate(model, mesh, max(args.gen - 1, 0),
+                                     args.temperature),
                        donate_argnums=donate)
 
     ds = LMDatasetConfig(vocab=cfg.vocab)
@@ -97,10 +127,16 @@ def main() -> None:
     if backend in ("stream", "fused"):
         state = transport_state_compressed(state, cfg,
                                            validation=args.validate)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # first token gets its own fold (2^32-1 can't collide with the scan's
+    # per-step fold_in(key, i), i < gen)
+    tok = _next_token(logits, args.temperature,
+                      jax.random.fold_in(key, 2**32 - 1))
 
     t0 = time.time()
-    toks, state = generate(params, tok, state, jnp.int32(S))
+    if args.temperature > 0.0:
+        toks, state = generate(params, tok, state, jnp.int32(S), key)
+    else:
+        toks, state = generate(params, tok, state, jnp.int32(S))
     jax.block_until_ready(toks)
     t_dec = time.time() - t0
     gen = np.asarray(jnp.concatenate([tok, toks], axis=1))[:, :args.gen]
@@ -218,14 +254,25 @@ def transport_state_compressed(state, cfg, sample_leaf: int | None = None,
     return ccaches, enc_out
 
 
-def model_prefill_pad(prefill_fn, params, prompts, cache_len, enc=None):
+def model_prefill_pad(prefill_fn, params, prompts, cache_len, enc=None,
+                      bucket=True):
     """prefill builds a cache sized to the prompt; pad it to cache_len so
-    decode can run. (One jit'd pad via device_put keeps shardings.)"""
+    decode can run. (One jit'd pad via device_put keeps shardings.)
+
+    ``cache_len`` is bucketed up to the power-of-two ladder
+    (``serve.bucket.pow2_bucket`` — the same helper the continuous
+    engine's cache ladder uses) so downstream decode jits, which key on
+    the padded cache shape, compile at most once per bucket instead of
+    once per distinct ``prompt+gen`` total. End-padding past the
+    requested length is position-correct: the decode mask never attends
+    beyond ``pos``. ``bucket=False`` keeps the exact length."""
     if enc is not None:
         logits, (caches, enc_out), aux = prefill_fn(params, prompts, enc)
     else:
         logits, (caches, enc_out), aux = prefill_fn(params, prompts)
     S = prompts.shape[1]
+    if bucket:
+        cache_len = pow2_bucket(max(cache_len, S), lo=8)
     pad = cache_len - S
 
     def padk(x):
@@ -236,6 +283,39 @@ def model_prefill_pad(prefill_fn, params, prompts, cache_len, enc=None):
         return x
     caches = jax.tree_util.tree_map(padk, caches)
     return logits, (caches, enc_out), aux
+
+
+def serve_continuous(args, cfg, mesh, model, params) -> None:
+    """``--requests N``: run a synthetic heavy-traffic trace through the
+    continuous-batching engine and print its throughput report."""
+    from ..serve import ServeEngine, synthetic_trace
+
+    eng = ServeEngine(model, params, mesh, n_slots=args.slots,
+                      max_cache_len=pow2_ceil(args.prompt_len + args.gen),
+                      page_tokens=args.page_tokens,
+                      validation=args.validate,
+                      temperature=args.temperature, seed=args.seed)
+    trace = synthetic_trace(
+        args.requests, vocab=cfg.vocab, seed=args.seed,
+        prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
+        gen_lo=max(args.gen // 4, 1), gen_hi=args.gen)
+    rep = eng.run(trace, preempt_after=args.preempt_after)
+    print(f"[serve] {cfg.name} continuous: {rep['n_requests']} requests "
+          f"({rep['n_rejected']} rejected) in {rep['wall_s']:.2f} s "
+          f"over {args.slots} slots")
+    print(f"  {rep['requests_per_s']:.2f} req/s  {rep['tokens_per_s']:.1f} "
+          f"tok/s  p50 {rep['p50_token_ms']:.1f} ms/token  "
+          f"p95 {rep['p95_token_ms']:.1f} ms/token  "
+          f"evictions {rep['evictions']}")
+    print(f"  KV stream: {rep['kv_bytes_measured']/1e6:.3f} MB measured "
+          f"(dense {rep['kv_bytes_dense']/1e6:.3f} MB) over "
+          f"{rep['kv_pages']} pages, zero-block fraction "
+          f"{rep['zero_frac']:.3f}, {rep['pages_recovered']} pages "
+          f"recovered dense")
+    print(f"  dispatch shapes: decode {rep['decode_shapes']}"
+          f"/{rep['decode_shape_bound']}  prefill {rep['prefill_shapes']}"
+          f"/{rep['prefill_shape_bound']}  reconcile max "
+          f"|measured-predicted| {rep['reconcile_max_delta_bytes']:.2f} B")
 
 
 if __name__ == "__main__":

@@ -162,34 +162,73 @@ def make_decode_step(model: LM, mesh):
     return decode_step
 
 
-def make_generate(model: LM, mesh, steps: int):
-    """Whole-generation greedy decode as ONE jitted ``lax.scan`` over the
+def _next_token(logits, temperature: float, key, i=None):
+    """Greedy argmax at temperature 0.0; categorical sampling otherwise
+    (``key`` folded with the step index when scanning)."""
+    if temperature > 0.0:
+        if key is None:
+            raise ValueError("temperature > 0 requires a PRNG key")
+        if i is not None:
+            key = jax.random.fold_in(key, i)
+        nxt = jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    return nxt.astype(jnp.int32)[:, None]
+
+
+def make_generate(model: LM, mesh, steps: int, temperature: float = 0.0):
+    """Whole-generation decode as ONE jitted ``lax.scan`` over the
     decode step — a single dispatch for ``steps`` tokens instead of one
-    Python-loop dispatch per token.
+    Python-loop dispatch per token. ``temperature=0.0`` (default) is
+    greedy argmax; > 0 samples from the softmax at that temperature, in
+    which case ``generate`` takes a PRNG ``key`` (folded per step).
 
     ``state`` may arrive with its KV caches in compressed payload form
     (``CompressedMap`` leaves from serve.py's prefill -> decode handoff):
     what crosses the jit boundary is the (payload, bitmap) stream, and the
     caches are unpacked here, inside the dispatch, before the scan.
 
-    generate(params, tok0 (B,1), state, pos0) -> (tokens (B, steps), state)
+    generate(params, tok0 (B,1), state, pos0[, key])
+        -> (tokens (B, steps), state)
     """
     from ..compress import decompress_tree
 
-    def generate(params, tok0, state, pos0):
+    def generate(params, tok0, state, pos0, key=None):
         with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
             state = decompress_tree(state)     # no-op for dense caches
 
             def body(carry, i):
                 tok, st = carry
                 logits, st = model.decode_step(params, tok, st, pos0 + i)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                nxt = _next_token(logits, temperature, key, i)
                 return (nxt, st), nxt
 
             (_, state_out), toks = jax.lax.scan(
                 body, (tok0, state), jnp.arange(steps, dtype=jnp.int32))
             return jnp.moveaxis(toks[..., 0], 0, 1), state_out
     return generate
+
+
+def make_decode_slotted(model: LM, mesh, temperature: float = 0.0):
+    """One continuous-batching decode step across B independent request
+    lanes: ``token (B,1)``, ``pos (B,)`` — each lane at its own sequence
+    position (serve/engine.py's hot path). Returns the per-lane next
+    token alongside the updated state; ``key`` is ignored at temperature
+    0.0 but stays in the signature so the jitted dispatch shape set is
+    sampler-independent.
+
+    Unlike the compressed prefill->decode handoff (whose payload buffers
+    can't back the dense outputs — PR 3 dropped donation there), the hot
+    state here IS the dense working set, with the compressed slabs owned
+    by the pool: the caller jits this with ``donate_argnums=(2,)`` and
+    the cache buffers are reused in place across every step.
+    """
+    def decode_slotted(params, token, state, pos, key):
+        with sharding_hints(mesh, **_hint_args(model.cfg, mesh)):
+            logits, state = model.decode_step(params, token, state, pos)
+            return _next_token(logits, temperature, key, None), state
+    return decode_slotted
 
 
 # ---------------------------------------------------------------------------

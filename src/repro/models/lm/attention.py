@@ -290,7 +290,9 @@ def gather_kv_shards(k: jax.Array, v: jax.Array, zc) -> tuple[jax.Array, jax.Arr
 # ---------------------------------------------------------------------------
 
 def attend_decode(q, k_cache, v_cache, pos, *, window: int = 0) -> jax.Array:
-    """q (B,1,Hq,hd); caches (B,T,Hkv,hd); pos: current index (scalar).
+    """q (B,1,Hq,hd); caches (B,T,Hkv,hd); pos: current index — a scalar
+    (whole batch at one position) or (B,) per-lane positions (the slotted
+    continuous-batching decode, where every lane is a different request).
     With `window`, the cache is a ring buffer of size T == window."""
     B, _, Hq, hd = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -299,11 +301,19 @@ def attend_decode(q, k_cache, v_cache, pos, *, window: int = 0) -> jax.Array:
     s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
                    preferred_element_type=jnp.float32)
     idx = jnp.arange(T)
-    if window:
-        valid = idx < jnp.minimum(pos + 1, T)                    # ring: all live
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        if window:
+            valid = idx < jnp.minimum(pos + 1, T)                # ring: all live
+        else:
+            valid = idx <= pos
+        valid = valid[None]                                      # (1, T)
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        if window:
+            valid = idx[None, :] < jnp.minimum(pos + 1, T)[:, None]
+        else:
+            valid = idx[None, :] <= pos[:, None]                 # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(B, 1, Hq, hd)

@@ -206,18 +206,29 @@ def init_layer_cache(typ: str, cfg: LMConfig, batch: int, cache_len: int, dtype)
     raise ValueError(typ)
 
 
+def _cache_write(cache, new, slot):
+    """Write one token's K or V (B,1,Hkv,hd) at ``slot`` — a scalar (every
+    lane writes the same position) or (B,) per-lane slots (the slotted
+    continuous-batching decode)."""
+    new = new.astype(cache.dtype)
+    slot = jnp.asarray(slot)
+    if slot.ndim == 0:
+        return jax.lax.dynamic_update_slice(cache, new, (0, slot, 0, 0))
+    T = cache.shape[1]
+    hit = jnp.arange(T)[None, :] == slot[:, None]            # (B, T)
+    return jnp.where(hit[:, :, None, None], new, cache)
+
+
 def apply_layer_decode(p, x, cache, typ: str, cfg: LMConfig, pos, rope1,
                        enc_out=None):
-    """x (B,1,d). Returns (x, new_cache)."""
+    """x (B,1,d); pos scalar or (B,) per-lane. Returns (x, new_cache)."""
     h = _norm_apply(cfg, p["norm1"], x)
     if typ in ("global", "local"):
         q, k, v = _qkv(p["attn"], h, cfg, rope1)
         T = cache["k"].shape[1]
         slot = (pos % T) if typ == "local" else pos
-        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
+        kc = _cache_write(cache["k"], k, slot)
+        vc = _cache_write(cache["v"], v, slot)
         o = attn.attend_decode(q, kc, vc, pos,
                                window=cfg.window if typ == "local" else 0)
         x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))

@@ -253,11 +253,16 @@ class LM:
         return logits[:, 0], (caches, enc_out), aux
 
     def decode_step(self, params, token, state, pos):
-        """token (B,1) int32; pos scalar int32. Returns (logits (B,V), state)."""
+        """token (B,1) int32; pos scalar int32, or (B,) int32 per-lane
+        positions (slotted continuous-batching decode — each lane is an
+        independent request at its own sequence position). Returns
+        (logits (B,V), state)."""
         cfg = self.cfg
         caches, enc_out = state
         x = params["embed"][token].astype(self.cdt) * (cfg.d_model ** 0.5)
-        rope1 = rope_frequencies(cfg.head_dim, cfg.rope_theta, pos[None])
+        pos = jnp.asarray(pos)
+        rope1 = rope_frequencies(cfg.head_dim, cfg.rope_theta,
+                                 pos[None] if pos.ndim == 0 else pos[:, None])
         new_caches = []
         for ri, (pattern, count) in enumerate(self.runs):
             rp = params[f"run{ri}"]

@@ -1,0 +1,20 @@
+"""Continuous-batching serving over a paged compressed-KV pool.
+
+- :mod:`~repro.serve.bucket` — power-of-two shape ladders (the bounded
+  compile-shape contract shared by both serve paths);
+- :mod:`~repro.serve.scheduler` — host-side admission / preemption /
+  retirement policy over plain :class:`Request` records;
+- :mod:`~repro.serve.pool` — the paged store of compressed KV payload
+  slabs (page in/out in ``(bitmap, payload)`` stream form, per-page
+  Eq. 2/3 metering + ingest validation);
+- :mod:`~repro.serve.engine` — the slotted decode loop tying them
+  together (``launch.serve`` is a thin CLI over this).
+"""
+from .bucket import bucket_ladder, pow2_bucket, pow2_ceil, pow2_floor
+from .engine import ServeEngine
+from .pool import PagedKVPool
+from .scheduler import Request, Scheduler, synthetic_trace
+
+__all__ = ["ServeEngine", "PagedKVPool", "Request", "Scheduler",
+           "synthetic_trace", "pow2_bucket", "pow2_ceil", "pow2_floor",
+           "bucket_ladder"]

@@ -1,0 +1,359 @@
+"""Continuous-batching serving engine over a paged compressed-KV pool.
+
+One engine = one model + one hot working set: a dense batched cache at
+bucketed shape ``(Bb, C)`` whose lanes are in-flight requests at
+*different* sequence positions, advanced together by the slotted decode
+step (``steps.make_decode_slotted`` — vector ``pos``). Everything not in
+a lane lives in the :class:`~repro.serve.pool.PagedKVPool` as compressed
+payload slabs; admission and eviction are page-in/page-out in stream
+form.
+
+Bounded dispatch shapes — asserted, not observed
+------------------------------------------------
+The decode hot path may only be compiled at ``(Bb, C)`` pairs from the
+declared power-of-two ladders (``batch_ladder`` x ``cache_ladder``) and
+prefill only at prompt buckets from ``prefill_ladder``; any other shape
+raises *before* tracing. Cache length only grows (grow-only C keeps
+page-in padding one-directional), and local-attention rings stay at
+``T == window`` because the cache ladder starts at
+``pow2_ceil(window)`` — so a page written at one bucket reads back
+bitwise at any later bucket.
+
+Chunked admission
+-----------------
+Prompts are never padded (padding would poison cache positions the
+decode mask can't hide). A request prefills its largest power-of-two
+prefix ``Pb = pow2_floor(P)`` in one exact-shape dispatch, and the
+remaining ``P - Pb`` prompt tokens ride the normal slotted decode as
+teacher-forced steps (output discarded) — mixed prefill/decode
+continuous batching. When ``Pb == P`` the last prompt token is replayed
+at ``pos = P - 1`` (rewriting its own KV with the identical value) to
+produce the first sampled token; prompts shorter than the smallest
+prefill bucket skip prefill entirely and teacher-force from ``pos 0``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.steps import make_decode_slotted, make_prefill
+from ..models.lm import LM
+from .bucket import bucket_ladder, pow2_bucket, pow2_ceil, pow2_floor
+from .pool import PagedKVPool
+from .scheduler import Request, Scheduler
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+class ServeEngine:
+    DONATE_ARGNUMS = (2,)     # the dense hot state — pool owns the slabs
+
+    def __init__(self, model: LM, params, mesh, *, n_slots: int = 4,
+                 max_cache_len: int = 256, page_tokens: int = 16,
+                 min_prefill: int = 8, validation: str = "off",
+                 temperature: float = 0.0, seed: int = 0,
+                 use_kernel_codec: bool = False):
+        cfg = model.cfg
+        if cfg.encoder_layers:
+            raise NotImplementedError("ServeEngine serves decoder-only "
+                                      "stacks (no encoder cross-attention)")
+        for pattern, _ in model.runs:
+            bad = [t for t in pattern if t not in ("global", "local")]
+            if bad:
+                raise NotImplementedError(
+                    f"ServeEngine pages attention caches only; layer types "
+                    f"{bad} carry recurrent state (see ROADMAP follow-ons)")
+        has_local = any("local" in p for p, _ in model.runs)
+        if has_local and (cfg.window & (cfg.window - 1)):
+            raise ValueError(f"window {cfg.window} must be a power of two "
+                             "so ring slots align across prefill buckets")
+        self.model, self.params, self.mesh = model, params, mesh
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.temperature = temperature
+        self._root_key = jax.random.PRNGKey(seed)
+
+        # --- bucketed dispatch ladders (the compile-shape contract) ---
+        c_lo = pow2_ceil(max(cfg.window if has_local else 1, page_tokens))
+        self.c_lo = c_lo
+        self.batch_ladder = bucket_ladder(1, n_slots)
+        self.cache_ladder = bucket_ladder(c_lo, max(max_cache_len, c_lo))
+        self.p_lo = min_prefill
+        self.prefill_ladder = bucket_ladder(
+            min_prefill, max(pow2_floor(self.cache_ladder[-1] - 1),
+                             min_prefill))
+        self.decode_shape_bound = len(self.batch_ladder) * len(self.cache_ladder)
+
+        self.pool = PagedKVPool(page_tokens=page_tokens,
+                                bs=cfg.zebra_block_seq, bc=cfg.zebra_block_ch,
+                                validation=validation,
+                                use_kernel=use_kernel_codec)
+        self._prefill = jax.jit(make_prefill(model, mesh))
+        self._decode = jax.jit(make_decode_slotted(model, mesh, temperature),
+                               donate_argnums=self.DONATE_ARGNUMS)
+        self._decode_shapes: set[tuple[int, int]] = set()
+        self._prefill_shapes: set[int] = set()
+
+        # per-leaf batch axis of the cache tree (leaves are (B, ...) or,
+        # under a scanned run, (count, B, ...)): diff two abstract inits
+        a = jax.eval_shape(functools.partial(model.init_cache, 3, c_lo))
+        b = jax.eval_shape(functools.partial(model.init_cache, 5, c_lo))
+
+        def _axis(sa, sb):
+            d = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape)) if x != y]
+            assert len(d) == 1, (sa.shape, sb.shape)
+            return d[0]
+        self._baxes = _tree_map(_axis, a, b)
+
+        # --- hot working set ---
+        self._Bb = self.batch_ladder[0]
+        self._C = self.cache_ladder[0]
+        self._hot = model.init_cache(self._Bb, self._C)
+        self._lanes: list[Request | None] = [None] * self._Bb
+        self._step_no = 0
+        self.scheduler: Scheduler | None = None
+
+    # ------------------------------------------------------------------
+    # lane surgery (host-side, between steps — never on the hot path)
+    # ------------------------------------------------------------------
+    def _take_lane(self, lane: int):
+        return _tree_map(
+            lambda x, a: jax.lax.slice_in_dim(x, lane, lane + 1, axis=a),
+            self._hot, self._baxes)
+
+    def _set_lane(self, hot, lane: int, sub):
+        def one(x, a, s):
+            idx = [slice(None)] * x.ndim
+            idx[a] = slice(lane, lane + 1)
+            return x.at[tuple(idx)].set(s.astype(x.dtype))
+        return _tree_map(one, hot, self._baxes, sub)
+
+    def _place(self, hot, lane: int, r: Request, sub, lanes) -> Any:
+        hot = self._set_lane(hot, lane, sub)
+        lanes[lane] = r
+        return hot
+
+    def _pad_like(self, sub, C: int):
+        """Zero-pad a per-request tree (from prefill or page-in at an
+        older, smaller bucket) up to this engine's lane shapes at cache
+        bucket ``C``. End-padding is position-correct: global caches are
+        position-indexed and rings stay at T == window."""
+        ref = jax.eval_shape(functools.partial(self.model.init_cache, 1, C))
+
+        def one(s, r):
+            if s.shape == r.shape:
+                return s
+            assert all(a <= b for a, b in zip(s.shape, r.shape)), \
+                (s.shape, r.shape)
+            pad = [(0, b - a) for a, b in zip(s.shape, r.shape)]
+            return jnp.pad(s, pad)
+        return _tree_map(one, sub, ref)
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+    def _req_cache_bucket(self, r: Request) -> int:
+        return pow2_bucket(max(r.total_len, self.c_lo), lo=self.c_lo,
+                           hi=self.cache_ladder[-1])
+
+    def _fits(self, r: Request) -> bool:
+        if r.prompt_len < 1:
+            return False
+        try:
+            self._req_cache_bucket(r)
+        except ValueError:
+            return False
+        return True
+
+    def _prefill_bucket(self, P: int) -> int:
+        pb = pow2_floor(P)
+        return pb if pb >= self.p_lo else 0
+
+    def _admit_tree(self, r: Request):
+        """Prefill (first admission) or page-in (re-admission after
+        eviction) one request; returns its per-request cache tree. Either
+        way the caches cross the engine boundary in stream form — fresh
+        prefills round-trip through the pool so page ingest validation
+        and byte metering cover admission traffic too."""
+        if r.rid in self.pool:                 # evicted earlier: resume
+            return self.pool.page_in(r.rid)
+        P = r.prompt_len
+        pb = self._prefill_bucket(P)
+        if pb:
+            if pb not in self.prefill_ladder:
+                raise RuntimeError(f"prefill bucket {pb} outside ladder "
+                                   f"{self.prefill_ladder}")
+            self._prefill_shapes.add(pb)
+            prompt = jnp.asarray(r.prompt[:pb], jnp.int32)[None, :]
+            _, (caches, _), _ = self._prefill(self.params, prompt)
+        else:                                  # short prompt: decode-only
+            caches = self.model.init_cache(1, self.c_lo)
+        r.fed = min(pb, P - 1)                 # Pb == P replays last token
+        r.pos = r.fed
+        r.next_tok = int(r.prompt[r.fed])
+        # pad to the ladder floor BEFORE paging out: prefill buckets below
+        # page_tokens would otherwise fall to the dense leaf path — padded,
+        # admission traffic rides the stream like eviction traffic (the
+        # zero tail is all dead blocks, nearly free on the wire)
+        self.pool.page_out(r.rid, self._pad_like(caches, self.c_lo))
+        return self.pool.page_in(r.rid)
+
+    def _evict(self, lane: int, tick: int) -> None:
+        r = self._lanes[lane]
+        self.pool.page_out(r.rid, self._take_lane(lane))
+        self._lanes[lane] = None
+        self.scheduler.preempt(r, tick)
+
+    # ------------------------------------------------------------------
+    def _schedule(self, tick: int, now: float) -> None:
+        sched = self.scheduler
+        for lane, r in enumerate(self._lanes):
+            if r is not None and sched.should_preempt(r):
+                self._evict(lane, tick)
+        n_active = sum(r is not None for r in self._lanes)
+        admitted = sched.admit(tick, self.n_slots - n_active, self._fits)
+        for r in admitted:
+            r.t_submit = r.t_submit or now
+        new_active = [r for r in self._lanes if r is not None] + admitted
+        Bb = pow2_bucket(max(len(new_active), 1), lo=1, hi=self.n_slots)
+        C = self._C
+        for r in admitted:
+            C = max(C, self._req_cache_bucket(r))
+        if Bb == self._Bb and C == self._C:
+            free = [i for i, r in enumerate(self._lanes) if r is None]
+            for lane, r in zip(free, admitted):
+                sub = self._pad_like(self._admit_tree(r), C)
+                self._hot = self._place(self._hot, lane, r, sub, self._lanes)
+            return
+        # bucket change: rebuild the hot set at (Bb, C), carrying lanes
+        assert Bb in self.batch_ladder and C in self.cache_ladder, (Bb, C)
+        carried = [(r, self._pad_like(self._take_lane(lane), C))
+                   for lane, r in enumerate(self._lanes) if r is not None]
+        hot = self.model.init_cache(Bb, C)
+        lanes: list[Request | None] = [None] * Bb
+        self._Bb, self._C = Bb, C
+        for lane, (r, sub) in enumerate(carried + [(r, None) for r in admitted]):
+            if sub is None:
+                sub = self._pad_like(self._admit_tree(r), C)
+            hot = self._place(hot, lane, r, sub, lanes)
+        self._hot, self._lanes = hot, lanes
+
+    # ------------------------------------------------------------------
+    def _step(self, now: float) -> float:
+        """One slotted decode dispatch across every lane. Returns the
+        post-sync wall clock."""
+        key = (self._Bb, self._C)
+        if key not in self._decode_shapes:
+            if self._Bb not in self.batch_ladder \
+                    or self._C not in self.cache_ladder:
+                raise RuntimeError(f"decode dispatch shape {key} outside "
+                                   f"the bucketed ladder")
+            self._decode_shapes.add(key)
+            if len(self._decode_shapes) > self.decode_shape_bound:
+                raise RuntimeError("decode dispatch shape count exceeded "
+                                   f"its bound {self.decode_shape_bound}")
+        tok = jnp.asarray(
+            [[r.next_tok if r else 0] for r in self._lanes], jnp.int32)
+        pos = jnp.asarray(
+            [r.pos if r else 0 for r in self._lanes], jnp.int32)
+        step_key = jax.random.fold_in(self._root_key, self._step_no)
+        self._step_no += 1
+        nxt, (caches, _) = self._decode(self.params, tok, (self._hot, None),
+                                        pos, step_key)
+        self._hot = caches
+        nxt_host = np.asarray(nxt)[:, 0]       # device sync
+        now = time.time()
+        for lane, r in enumerate(self._lanes):
+            if r is None:
+                continue
+            r.slot_steps += 1
+            r.pos += 1
+            if r.pos < r.prompt_len:           # teacher-forced prompt tail
+                r.next_tok = int(r.prompt[r.pos])
+                continue
+            t = int(nxt_host[lane])
+            r.out.append(t)
+            r.next_tok = t
+            r.token_times.append(now)
+            if not r.t_first:
+                r.t_first = now
+        return now
+
+    def _retire(self, now: float) -> None:
+        for lane, r in enumerate(self._lanes):
+            if r is not None and r.done:
+                r.t_done = now
+                self.scheduler.retire(r)
+                self.pool.free(r.rid)
+                self._lanes[lane] = None
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], *, preempt_after: int = 0) -> dict:
+        """Serve a trace to completion; returns the throughput report."""
+        self.scheduler = Scheduler(requests, preempt_after=preempt_after)
+        tick = 0
+        t0 = now = time.time()
+        while True:
+            self._schedule(tick, now)
+            if not any(r is not None for r in self._lanes):
+                nxt = self.scheduler.next_arrival()
+                if nxt is None:
+                    break
+                tick = max(tick + 1, nxt)      # idle until the next arrival
+                continue
+            now = self._step(now)
+            self._retire(now)
+            tick += 1
+        wall = time.time() - t0
+        return self.report(wall)
+
+    # ------------------------------------------------------------------
+    def report(self, wall: float) -> dict:
+        # raises if any page's measured bytes leave the Eq. 2/3
+        # index-padding bound — the per-page reconcile is load-bearing
+        rec = self.pool.meter.reconcile(tol_bytes_per_map=1.0)
+        done = [r for r in self.scheduler.completed if r.status == "done"]
+        deltas = []
+        for r in done:
+            prev = r.t_submit
+            for t in r.token_times:
+                deltas.append(t - prev)
+                prev = t
+        deltas = np.asarray(sorted(deltas)) if deltas else np.zeros(1)
+        kv = {"measured": 0, "predicted": 0.0, "dense": 0, "pages": 0}
+        for r in done:
+            rb = self.pool.request_bytes(r.rid)
+            for k in kv:
+                kv[k] += rb[k]
+        n_tok = sum(len(r.out) for r in done)
+        return {
+            "n_requests": len(done),
+            "n_rejected": sum(1 for r in self.scheduler.completed
+                              if r.status == "rejected"),
+            "wall_s": wall,
+            "requests_per_s": len(done) / wall if wall else 0.0,
+            "tokens_per_s": n_tok / wall if wall else 0.0,
+            "tokens": n_tok,
+            "steps": self._step_no,
+            "p50_token_ms": float(np.percentile(deltas, 50) * 1e3),
+            "p95_token_ms": float(np.percentile(deltas, 95) * 1e3),
+            "evictions": self.scheduler.evictions,
+            "kv_bytes_measured": int(kv["measured"]),
+            "kv_bytes_predicted": float(kv["predicted"]),
+            "kv_bytes_dense": int(kv["dense"]),
+            "kv_pages": int(kv["pages"]),
+            "pages_recovered": self.pool.n_recovered,
+            "zero_frac": self.pool.zero_frac(),
+            "decode_shapes": len(self._decode_shapes),
+            "decode_shape_bound": self.decode_shape_bound,
+            "prefill_shapes": len(self._prefill_shapes),
+            "prefill_shape_bound": len(self.prefill_ladder),
+            "reconcile_max_delta_bytes": rec["max_abs_delta_bytes"],
+        }

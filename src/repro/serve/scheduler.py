@@ -1,0 +1,132 @@
+"""Request admission, preemption and retirement for the serving engine.
+
+Everything here is host-side policy over plain Python state — the
+scheduler never touches device arrays. The engine asks it three
+questions per step: who newly fits in a free slot (FCFS over arrived
+requests), who must be preempted (round-robin fairness under slot
+pressure: a lane that has held its slot ``preempt_after`` consecutive
+steps while others wait is evicted to the compressed pool and requeued),
+and who is done (EOS or ``max_new`` reached).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its host-side decode bookkeeping.
+
+    ``pos`` is the cache position the next step writes; ``fed`` counts
+    prompt tokens whose KV is final in the cache. Until ``pos`` reaches
+    ``prompt_len`` the lane is teacher-forced (chunked-prefill tail: the
+    next input token comes from the prompt and the step's output is
+    discarded); from there on the model's own tokens feed back."""
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new: int
+    arrival: int = 0                # engine tick at which it becomes visible
+    eos_token: int | None = None
+    # --- runtime ---
+    out: list = dataclasses.field(default_factory=list)
+    next_tok: int = 0
+    pos: int = 0
+    fed: int = 0                    # prompt tokens with final KV in cache
+    status: str = "waiting"         # waiting | running | done
+    slot_steps: int = 0             # consecutive steps in-slot (preempt clock)
+    evictions: int = 0
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    token_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        """Cache positions the request needs end to end."""
+        return self.prompt_len + self.max_new
+
+    @property
+    def done(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        return (self.eos_token is not None and len(self.out) > 0
+                and self.out[-1] == self.eos_token)
+
+
+def synthetic_trace(n_requests: int, *, vocab: int, seed: int = 0,
+                    prompt_lo: int = 8, prompt_hi: int = 48,
+                    gen_lo: int = 8, gen_hi: int = 32,
+                    arrival_every: int = 0) -> list[Request]:
+    """Deterministic heavy-traffic trace: ``n_requests`` requests with
+    varying prompt/gen lengths. ``arrival_every`` staggers arrivals every
+    N engine steps (0 = all arrive at tick 0 — a burst)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_lo, prompt_hi + 1))
+        gen = int(rng.integers(gen_lo, gen_hi + 1))
+        prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
+                            arrival=i * arrival_every))
+    return reqs
+
+
+class Scheduler:
+    """FCFS admission with optional round-robin preemption."""
+
+    def __init__(self, requests: list[Request], *, preempt_after: int = 0):
+        self.waiting: deque[Request] = deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        self.preempt_after = preempt_after
+        self.evictions = 0
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def pending(self) -> int:
+        return len(self.waiting)
+
+    def next_arrival(self) -> int | None:
+        return self.waiting[0].arrival if self.waiting else None
+
+    def admit(self, tick: int, free_slots: int,
+              fits=lambda r: True) -> list[Request]:
+        """Pop up to ``free_slots`` arrived requests, FCFS. ``fits``
+        vetoes requests the engine can't cache (too long for the
+        ladder) — they are dropped with a visible status."""
+        admitted = []
+        while self.waiting and free_slots > 0 \
+                and self.waiting[0].arrival <= tick:
+            r = self.waiting.popleft()
+            if not fits(r):
+                r.status = "rejected"
+                self.completed.append(r)
+                continue
+            r.status = "running"
+            r.slot_steps = 0
+            admitted.append(r)
+            free_slots -= 1
+        return admitted
+
+    def should_preempt(self, r: Request) -> bool:
+        """Evict a lane that has monopolized its slot while others wait."""
+        return (self.preempt_after > 0 and r.slot_steps >= self.preempt_after
+                and bool(self.waiting))
+
+    def preempt(self, r: Request, tick: int) -> None:
+        r.status = "waiting"
+        r.slot_steps = 0
+        r.evictions += 1
+        r.arrival = tick                # back of the arrived queue
+        self.evictions += 1
+        self.waiting.append(r)
+
+    def retire(self, r: Request) -> None:
+        r.status = "done"
+        self.completed.append(r)

@@ -1,0 +1,399 @@
+"""Continuous-batching serving over the paged compressed-KV pool.
+
+Covers the serve subsystem's load-bearing contracts: the power-of-two
+shape ladders (bounded compile shapes, asserted not observed), the slab
+page-out -> page-in bitwise round trip (including all-dead pages),
+output parity between continuous batching and the one-shot generate
+path, eviction-under-pressure correctness (a request that loses its
+lane resumes from the compressed pool with identical output), chaos at
+the page-ingest boundary (corrupt page -> per-page dense fallback,
+detection asserted against the injection plan), hot-state buffer
+donation on the decode dispatch, and the bucketed ``model_prefill_pad``
+compile count.
+"""
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.ft import Fault, inject
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (_next_token, make_decode_step, make_generate,
+                                make_prefill)
+from repro.models.lm import LM
+from repro.serve import (PagedKVPool, Request, Scheduler, ServeEngine,
+                         bucket_ladder, pow2_bucket, pow2_ceil, pow2_floor,
+                         synthetic_trace)
+
+
+# ---------------------------------------------------------------------------
+# fixtures (module-cached: one model init for the whole file)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _model(zebra_kv: bool = False):
+    sites = ("ffn_hidden", "kv_cache") if zebra_kv else ()
+    cfg = configs.reduced("gemma3-4b").replace(
+        param_dtype="bfloat16", zebra_sites=sites, zebra_t_obj=2.5)
+    mesh = make_host_mesh(model=1)
+    model = LM(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return cfg, mesh, model, params
+
+
+def _engine(**kw):
+    cfg, mesh, model, params = _model(kw.pop("zebra_kv", False))
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("page_tokens", 16)
+    return ServeEngine(model, params, mesh, **kw), cfg, model, params, mesh
+
+
+def _prompt(n, seed=0, vocab=512):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder unit
+# ---------------------------------------------------------------------------
+
+def test_pow2_helpers():
+    assert [pow2_ceil(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert [pow2_floor(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 2, 4, 8, 8]
+    assert pow2_bucket(1, lo=8) == 8          # floor of the ladder
+    assert pow2_bucket(20, lo=8) == 32
+    assert pow2_bucket(32, lo=8, hi=32) == 32
+    with pytest.raises(ValueError):
+        pow2_bucket(33, lo=8, hi=32)          # above the ladder top
+    assert bucket_ladder(8, 64) == (8, 16, 32, 64)
+    assert bucket_ladder(1, 1) == (1,)
+
+
+# ---------------------------------------------------------------------------
+# paged slab round trip
+# ---------------------------------------------------------------------------
+
+def test_slab_round_trip_bitwise_including_all_dead_pages():
+    """page_out -> page_in is bitwise, with mixed live / all-zero pages
+    and a non-pageable (odd-shape) dense leaf in the same tree."""
+    rng = np.random.default_rng(7)
+    k = rng.normal(size=(1, 32, 2, 32)).astype(np.float32)
+    k[:, 16:] = 0.0                           # pages 1.. are all-dead
+    v = np.zeros((1, 32, 2, 32), np.float32)  # every page all-dead
+    odd = rng.normal(size=(3, 5)).astype(np.float32)
+    tree = {"k": jnp.asarray(k), "v": jnp.asarray(v), "odd": jnp.asarray(odd)}
+
+    pool = PagedKVPool(page_tokens=16, bs=8, bc=128)
+    pool.page_out(0, tree)
+    back = pool.page_in(0)
+    for key in tree:
+        np.testing.assert_array_equal(np.asarray(back[key]),
+                                      np.asarray(tree[key]))
+    assert pool.n_pages_out == 4              # 2 leaves x 32/16 pages
+    assert pool.n_recovered == 0
+    # all-dead pages still move their index bytes but no payload blocks
+    rb = pool.request_bytes(0)
+    assert 0 < rb["measured"] < rb["dense"]
+    assert rb["pages"] == 4
+    assert 0 in pool
+    pool.free(0)
+    assert 0 not in pool
+
+
+def test_slab_reemit_replaces_and_remeters():
+    """page_out for an rid that already has a slab re-emits the stream —
+    eviction traffic is metered again, not deduplicated."""
+    x = {"k": jnp.ones((1, 16, 2, 32), jnp.float32)}
+    pool = PagedKVPool(page_tokens=16)
+    pool.page_out(1, x)
+    b1 = pool.request_bytes(1)["measured"]
+    pool.page_out(1, x)
+    assert pool.request_bytes(1)["measured"] == 2 * b1
+    np.testing.assert_array_equal(np.asarray(pool.page_in(1)["k"]),
+                                  np.asarray(x["k"]))
+
+
+# ---------------------------------------------------------------------------
+# chaos at the page-ingest boundary
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["bitflip", "truncate", "nan"])
+def test_page_ingest_detects_and_degrades_one_page(kind):
+    """A corrupt page is DETECTED (asserted against the plan's ground
+    truth, not inferred from parity), kept dense (per-page fallback),
+    and the request round-trips bitwise anyway."""
+    rng = np.random.default_rng(3)
+    tree = {"k": jnp.asarray(rng.normal(size=(1, 32, 2, 32)), jnp.float32)}
+    level = "checksum" if kind == "bitflip" else "structural"
+    pool = PagedKVPool(page_tokens=16, validation=level)
+    with inject(Fault(kind, site="page", times=1)) as plan:
+        pool.page_out(5, tree)
+    assert plan.injected == [(kind, "page")]
+    assert pool.n_recovered == 1
+    rb = pool.request_bytes(5)
+    assert rb["pages"] == 1                   # the other page stayed compressed
+    np.testing.assert_array_equal(np.asarray(pool.page_in(5)["k"]),
+                                  np.asarray(tree["k"]))
+
+
+def test_page_ingest_off_level_admits_silently():
+    """validation='off' is the no-check baseline: the fault is injected
+    but nothing detects it — n_recovered stays 0. (The integrity matrix
+    itself is pinned by test_faults.py; this pins the pool's gate.)"""
+    tree = {"k": jnp.ones((1, 16, 2, 32), jnp.float32)}
+    pool = PagedKVPool(page_tokens=16, validation="off")
+    with inject(Fault("nan", site="page", times=1)) as plan:
+        pool.page_out(9, tree)
+    assert plan.injected == [("nan", "page")]
+    assert pool.n_recovered == 0
+
+
+def test_engine_serves_through_page_chaos():
+    """End-to-end: a stream fault at the page boundary during a real
+    serve run degrades one page and the trace still completes, with the
+    recovery visible in the report."""
+    eng, cfg, *_ = _engine(validation="structural")
+    reqs = [Request(rid=i, prompt=_prompt(12, seed=i), max_new=4)
+            for i in range(2)]
+    with inject(Fault("truncate", site="page", times=1)) as plan:
+        rep = eng.run(reqs, preempt_after=0)
+    assert plan.injected == [("truncate", "page")]
+    assert rep["pages_recovered"] == 1
+    assert rep["n_requests"] == 2
+    assert all(len(r.out) == 4 for r in eng.scheduler.completed)
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy unit
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fcfs_admission_and_rejection():
+    reqs = [Request(rid=0, prompt=_prompt(8), max_new=4, arrival=0),
+            Request(rid=1, prompt=_prompt(8), max_new=4, arrival=5),
+            Request(rid=2, prompt=_prompt(8), max_new=4, arrival=0)]
+    s = Scheduler(reqs)
+    got = s.admit(tick=0, free_slots=4)
+    assert [r.rid for r in got] == [0, 2]      # rid 1 hasn't arrived
+    assert s.admit(tick=5, free_slots=4, fits=lambda r: False) == []
+    assert [r.status for r in s.completed] == ["rejected"]
+
+
+def test_scheduler_preemption_clock():
+    r = Request(rid=0, prompt=_prompt(8), max_new=4)
+    s = Scheduler([Request(rid=1, prompt=_prompt(8), max_new=4)],
+                  preempt_after=3)
+    r.slot_steps = 3
+    assert s.should_preempt(r)                # others are waiting
+    s.waiting.clear()
+    assert not s.should_preempt(r)            # nobody waiting: keep the lane
+    s2 = Scheduler([], preempt_after=0)
+    r.slot_steps = 10**6
+    assert not s2.should_preempt(r)           # preemption disabled
+
+
+def test_synthetic_trace_deterministic():
+    a = synthetic_trace(4, vocab=512, seed=3, arrival_every=2)
+    b = synthetic_trace(4, vocab=512, seed=3, arrival_every=2)
+    assert [r.arrival for r in a] == [0, 2, 4, 6]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+        assert x.max_new == y.max_new
+
+
+# ---------------------------------------------------------------------------
+# engine: parity, eviction, bounded shapes, donation
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_one_shot_generate():
+    """The slotted engine's tokens == the one-shot prefill+generate path
+    for the same prompt, greedy. Chunked admission (pow2-prefix prefill
+    + teacher-forced tail) must be invisible in the output."""
+    eng, cfg, model, params, mesh = _engine(n_slots=1, max_cache_len=32)
+    P, G = 20, 8                              # P+G=28 -> both paths cache at 32
+    prompt = _prompt(P, seed=11, vocab=cfg.vocab)
+    rep = eng.run([Request(rid=0, prompt=prompt, max_new=G)])
+    served = eng.scheduler.completed[0].out
+    assert rep["n_requests"] == 1 and len(served) == G
+
+    from repro.launch.serve import model_prefill_pad
+    prefill = jax.jit(make_prefill(model, mesh))
+    logits, state, _ = model_prefill_pad(
+        prefill, params, jnp.asarray(prompt)[None, :], P + G)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    generate = jax.jit(make_generate(model, mesh, G - 1))
+    toks, _ = generate(params, tok0, state, jnp.int32(P))
+    one_shot = np.concatenate([np.asarray(tok0), np.asarray(toks)], 1)[0]
+    np.testing.assert_array_equal(np.asarray(served), one_shot)
+
+
+def test_short_prompt_decode_only_admission_parity():
+    """A prompt below the smallest prefill bucket skips prefill and
+    teacher-forces from pos 0 — tokens match a manual scalar decode loop
+    over the same cache bucket."""
+    eng, cfg, model, params, mesh = _engine(n_slots=1, max_cache_len=32,
+                                            min_prefill=8)
+    P, G = 5, 6
+    prompt = _prompt(P, seed=4, vocab=cfg.vocab)
+    eng.run([Request(rid=0, prompt=prompt, max_new=G)])
+    served = eng.scheduler.completed[0].out
+    assert eng._prefill_shapes == set()       # prefill never dispatched
+
+    decode = jax.jit(make_decode_step(model, mesh))
+    st = (model.init_cache(1, eng._C), None)
+    tok = jnp.asarray([[int(prompt[0])]], jnp.int32)
+    out = []
+    for pos in range(P + G - 1):
+        lg, st = decode(params, tok, st, jnp.int32(pos))
+        nxt = int(jnp.argmax(lg, axis=-1)[0])
+        if pos + 1 < P:
+            tok = jnp.asarray([[int(prompt[pos + 1])]], jnp.int32)
+        else:
+            out.append(nxt)
+            tok = jnp.asarray([[nxt]], jnp.int32)
+    assert served == out
+
+
+def test_eviction_under_pressure_outputs_unchanged():
+    """Slot pressure + preemption: requests get evicted to the pool and
+    resume later, and every request's tokens equal the no-preemption
+    run. The page round trip is bitwise, so eviction must be invisible."""
+    def trace():
+        return [Request(rid=i, prompt=_prompt(10 + 3 * i, seed=20 + i),
+                        max_new=6) for i in range(4)]
+    eng1, *_ = _engine(n_slots=2, max_cache_len=64)
+    eng1.run(trace(), preempt_after=0)
+    base = {r.rid: r.out for r in eng1.scheduler.completed}
+
+    eng2, *_ = _engine(n_slots=2, max_cache_len=64)
+    rep = eng2.run(trace(), preempt_after=3)
+    assert rep["evictions"] > 0
+    pressured = {r.rid: (r.out, r.evictions) for r in eng2.scheduler.completed}
+    assert any(ev for _, ev in pressured.values())
+    for rid, out in base.items():
+        assert pressured[rid][0] == out, f"rid {rid} diverged after eviction"
+    # pool metering saw the eviction traffic: more pages than a clean run
+    assert rep["kv_pages"] >= eng1.report(1.0)["kv_pages"]
+
+
+def test_decode_dispatch_shapes_are_asserted_not_observed():
+    """A hot-set shape outside the declared ladder raises BEFORE tracing,
+    and the compiled-shape count is bounded by the ladder product."""
+    eng, *_ = _engine(n_slots=2, max_cache_len=64)
+    rep = eng.run(synthetic_trace(3, vocab=512, seed=1, prompt_lo=8,
+                                  prompt_hi=20, gen_lo=2, gen_hi=6))
+    assert rep["decode_shapes"] <= rep["decode_shape_bound"]
+    # the jit cache itself is bounded — compiled shape count, not calls
+    assert eng._decode._cache_size() <= rep["decode_shape_bound"]
+    assert eng._prefill._cache_size() <= len(eng.prefill_ladder)
+    eng._Bb = 3                               # not a power of two
+    with pytest.raises(RuntimeError, match="outside the bucketed ladder"):
+        eng._step(time.time())
+
+
+def test_engine_rejects_requests_beyond_cache_ladder():
+    eng, *_ = _engine(n_slots=1, max_cache_len=32)
+    reqs = [Request(rid=0, prompt=_prompt(30), max_new=30),   # needs 64 > 32
+            Request(rid=1, prompt=_prompt(8), max_new=2)]
+    rep = eng.run(reqs)
+    assert rep["n_rejected"] == 1 and rep["n_requests"] == 1
+    assert eng.scheduler.completed[0].status == "rejected"
+
+
+def test_decode_step_donates_hot_state():
+    """The decode dispatch donates the old hot working set (argnum 2):
+    after one step the previous cache buffers are actually deleted —
+    serving at bucket (Bb, C) holds ONE dense cache, not two."""
+    eng, *_ = _engine(n_slots=1, max_cache_len=32)
+    eng.scheduler = Scheduler([Request(rid=0, prompt=_prompt(9), max_new=4)])
+    eng._schedule(0, time.time())
+    old = jax.tree_util.tree_leaves(eng._hot)
+    eng._step(time.time())
+    assert all(x.is_deleted() for x in old)
+    new = jax.tree_util.tree_leaves(eng._hot)
+    assert not any(x.is_deleted() for x in new)
+
+
+def test_engine_refuses_unsupported_stacks():
+    cfg, mesh, model, params = _model()
+    bad = LM(cfg.replace(window=24))          # non-pow2 ring
+    with pytest.raises(ValueError, match="power of two"):
+        ServeEngine(bad, params, mesh)
+    rec = configs.reduced("recurrentgemma-2b").replace(
+        param_dtype="bfloat16", zebra_sites=())
+    rmodel = LM(rec)
+    with pytest.raises(NotImplementedError, match="recurrent state"):
+        ServeEngine(rmodel, jax.eval_shape(rmodel.init, jax.random.PRNGKey(0)),
+                    mesh)
+
+
+def test_report_reconciles_every_page():
+    """The report path runs meter.reconcile over every page — Eq. 2/3
+    within the index-padding bound, per page, or it raises."""
+    eng, *_ = _engine(n_slots=2, max_cache_len=64, zebra_kv=True)
+    rep = eng.run(synthetic_trace(3, vocab=512, seed=5, prompt_lo=8,
+                                  prompt_hi=24, gen_lo=2, gen_hi=6))
+    assert rep["kv_pages"] > 0
+    assert rep["reconcile_max_delta_bytes"] <= 1.0 + 1.0   # tol + roundoff
+    assert rep["kv_bytes_measured"] > 0
+    assert abs(rep["kv_bytes_measured"] - rep["kv_bytes_predicted"]) \
+        <= rep["kv_pages"] * 2.0
+    assert 0.0 <= rep["zero_frac"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: temperature + bucketed model_prefill_pad
+# ---------------------------------------------------------------------------
+
+def test_next_token_greedy_and_sampled():
+    logits = jnp.asarray([[0.1, 3.0, -1.0]])
+    assert int(_next_token(logits, 0.0, None)[0, 0]) == 1
+    key = jax.random.PRNGKey(0)
+    t = _next_token(logits, 0.7, key)
+    assert t.shape == (1, 1) and t.dtype == jnp.int32
+    with pytest.raises(ValueError, match="temperature"):
+        _next_token(logits, 0.7, None)
+    # sampling is key-deterministic
+    np.testing.assert_array_equal(np.asarray(_next_token(logits, 0.7, key)),
+                                  np.asarray(t))
+
+
+def test_generate_temperature_zero_matches_greedy_default():
+    cfg, mesh, model, params = _model()
+    prompts = jnp.asarray(_prompt(16, seed=2, vocab=cfg.vocab))[None, :]
+    from repro.launch.serve import model_prefill_pad
+    prefill = jax.jit(make_prefill(model, mesh))
+    logits, state, _ = model_prefill_pad(prefill, params, prompts, 24)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    g0 = jax.jit(make_generate(model, mesh, 4))
+    g1 = jax.jit(make_generate(model, mesh, 4, 0.0))
+    a, _ = g0(params, tok0, state, jnp.int32(16))
+    _, state2, _ = model_prefill_pad(prefill, params, prompts, 24)
+    b, _ = g1(params, tok0, state2, jnp.int32(16))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_model_prefill_pad_buckets_compile_count():
+    """Distinct cache_lens collapse onto the pow2 ladder: decode jits
+    keyed on the padded cache shape compile ONCE per bucket. This is the
+    recompile fix, asserted as a compile count."""
+    cfg, mesh, model, params = _model()
+    from repro.launch.serve import model_prefill_pad
+    prefill = jax.jit(make_prefill(model, mesh))
+    prompts = jnp.asarray(_prompt(16, seed=6, vocab=cfg.vocab))[None, :]
+    decode = jax.jit(make_decode_step(model, mesh))
+    shapes = set()
+    for cache_len in (17, 20, 25, 28, 32):    # all bucket to 32
+        _, state, _ = model_prefill_pad(prefill, params, prompts, cache_len)
+        shapes.add(jax.tree_util.tree_leaves(state[0])[0].shape)
+        decode(params, jnp.zeros((1, 1), jnp.int32), state, jnp.int32(16))
+    assert len(shapes) == 1
+    assert decode._cache_size() == 1
+    # opt-out keeps the exact length (legacy shape behavior)
+    _, state, _ = model_prefill_pad(prefill, params, prompts, 20, bucket=False)
+    glb = [x for x in jax.tree_util.tree_leaves(state[0]) if x.shape[-3] == 20]
+    assert glb, "exact-length pad lost"
