@@ -1,0 +1,185 @@
+"""Serving resilience under a deterministic fault storm — BENCH_serve_chaos.json.
+
+Serves the SAME deadline-carrying trace twice through a supervised
+``repro.serve.ServeEngine`` (crash-recoverable tick loop, bounded
+pending queue, per-boundary circuit breaker at page ingest):
+
+  serve_chaos/clean   supervised but fault-free — the goodput baseline
+  serve_chaos/storm   the deterministic storm armed via ``ft.inject``:
+                      one engine crash (``crash`` at site
+                      ``"engine_tick"``, a named tick) plus a burst of
+                      page-ingest stream corruptions (``truncate`` at
+                      site ``"page"``) sized to trip the page breaker
+                      and then fail its first half-open probes — the
+                      full trip -> probe -> decayed reopen -> recover
+                      lifecycle in one run
+
+Columns (the CI gate's exact contract, ``scripts/bench_gate.py``):
+
+  goodput_frac            storm completed-requests over clean (gate:
+                          >= 0.70 — the storm may shed, not collapse)
+  token_parity            1.0 iff every request completed under the
+                          storm is token-bitwise-equal to its clean run
+                          (gate: == 1.0 — crash recovery resumes from
+                          paged compressed KV without replaying or
+                          altering a single generated token)
+  crash_recoveries        snapshot restores taken (gate: >= 1)
+  breaker_trips/_expected measured closed->open transitions vs the
+                          count implied by the armed plan (gate: equal,
+                          and > 0 on the storm row)
+  breaker_recovered       1.0 iff the page breaker closed again before
+                          the run ended (gate: == 1.0)
+  shed_frac,
+  deadline_miss_frac      SLO accounting over the whole trace (gate:
+                          both in [0, 1])
+  faults_injected         ground-truth fired-fault count from the plan
+
+Both rows come from identically-configured engines (deadlines, queue
+bound, breaker, supervision) so the delta is the storm and nothing
+else. Standalone like serve_bench (its own CI shard in
+``scripts/ci.sh``, not in ``benchmarks/run.py``'s smoke list).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from benchmarks.common import emit, set_json_dir
+import repro.configs as configs
+from repro.ft import BreakerConfig, Fault, FTConfig, inject
+from repro.launch.mesh import make_host_mesh
+from repro.models.lm import LM
+from repro.serve import ServeEngine, synthetic_trace
+
+T_OBJ = 3.45                       # serve_bench's ~64%-zeros KV operating point
+TRACE = dict(vocab=512, seed=0, prompt_lo=8, prompt_hi=48,
+             gen_lo=8, gen_hi=16, arrival_every=1)
+MAX_CACHE = 128
+SLOTS = 4
+DEADLINE_TICKS = 96                # generous TTL: misses are possible, not built in
+QUEUE_BOUND = 4                    # pending-queue bound (overflow -> shed)
+CRASH_TICK = 12                    # mid-run, lanes guaranteed in flight
+PAGE_FAULTS = 6                    # 3 trip the breaker, 3 fail half-open probes
+# probe quickly so the full trip -> reopen -> recover lifecycle fits a
+# smoke-length run: probes at ticks +1, +3, +7, +15 after the trip
+BREAKER = BreakerConfig(trip_after=3, window=64, probe_after=1,
+                        probe_backoff=2.0, probe_cap=8, close_after=2)
+
+
+def _build():
+    cfg = configs.reduced("gemma3-4b").replace(
+        param_dtype="bfloat16", zebra_sites=("ffn_hidden", "kv_cache"),
+        zebra_t_obj=T_OBJ)
+    mesh = make_host_mesh(model=1)
+    model = LM(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return cfg, mesh, model, params
+
+
+def _serve(model, params, mesh, n_requests: int, *, storm: bool):
+    eng = ServeEngine(model, params, mesh, n_slots=SLOTS,
+                      max_cache_len=MAX_CACHE, page_tokens=16,
+                      validation="structural", queue_bound=QUEUE_BOUND,
+                      breaker=BREAKER)
+    warm = synthetic_trace(min(n_requests, 4), **TRACE)
+    for r in warm:                  # offset rids: no pool-meter site overlap
+        r.rid += 1000
+    eng.run(warm)                   # compiles the ladder shapes untimed
+    trace = synthetic_trace(n_requests, **TRACE,
+                            deadline_ticks=DEADLINE_TICKS)
+    ft_cfg = FTConfig(max_failures=4, backoff_base_s=0.0, jitter_seed=0)
+    if not storm:
+        rep = eng.run(trace, ft_cfg=ft_cfg)
+        injected = []
+    else:
+        with inject(Fault("crash", site="engine_tick", arg=CRASH_TICK),
+                    Fault("truncate", site="page", times=PAGE_FAULTS)) as plan:
+            rep = eng.run(trace, ft_cfg=ft_cfg)
+        injected = list(plan.injected)
+    outs = {r.rid: list(r.out) for r in eng.scheduler.completed
+            if r.status == "done"}
+    return rep, outs, injected
+
+
+def _row(name: str, rep: dict, outs: dict, injected: list, *,
+         goodput_frac: float, token_parity: float) -> dict:
+    page = rep["breakers"].get("page", {})
+    n_page_faults = sum(1 for k, s in injected if s == "page")
+    return {
+        "name": name,
+        "us_per_call": rep["wall_s"] / max(rep["steps"], 1) * 1e6,
+        "n_requests": rep["n_requests"],
+        "goodput_frac": round(goodput_frac, 4),
+        "token_parity": token_parity,
+        "n_shed": rep["n_shed"],
+        "shed_frac": round(rep["shed_frac"], 4),
+        "deadline_misses": rep["deadline_misses"],
+        "deadline_miss_frac": round(rep["deadline_miss_frac"], 4),
+        "deferrals": rep["deferrals"],
+        "retries": rep["retries"],
+        "crash_recoveries": rep["crash_recoveries"],
+        "recovered_requests": rep["recovered_requests"],
+        "breaker_trips": rep["breaker_trips"],
+        # the armed plan implies the trip count: the first `trip_after`
+        # detections trip once; later faults land on half-open probes
+        # (reopens, not closed->open trips)
+        "breaker_trips_expected":
+            1 if n_page_faults >= BREAKER.trip_after else 0,
+        "breaker_probes": rep["breaker_probes"],
+        "breaker_recovered": 1.0 if page.get("state", "closed") == "closed"
+        else 0.0,
+        "pages_breaker_dense": rep["pages_breaker_dense"],
+        "pages_recovered": rep["pages_recovered"],
+        "faults_injected": len(injected),
+        "evictions": rep["evictions"],
+        "kv_pages": rep["kv_pages"],
+        "zero_frac": round(rep["zero_frac"], 4),
+    }
+
+
+def run(n_requests: int = 10) -> list[dict]:
+    cfg, mesh, model, params = _build()
+    clean_rep, clean_outs, _ = _serve(model, params, mesh, n_requests,
+                                      storm=False)
+    storm_rep, storm_outs, injected = _serve(model, params, mesh, n_requests,
+                                             storm=True)
+    assert storm_rep["crash_recoveries"] >= 1, \
+        "the armed crash never fired — CRASH_TICK outside the run?"
+    assert ("crash", "engine_tick") in injected
+    # token parity: every request the storm completed must match its
+    # clean-run output bitwise — crash recovery and breaker degradation
+    # may shed work, never corrupt it
+    parity = 1.0
+    for rid, out in storm_outs.items():
+        if clean_outs.get(rid, out) != out:
+            parity = 0.0
+    goodput = (len(storm_outs) / len(clean_outs)) if clean_outs else 0.0
+    rows = [
+        _row("serve_chaos/clean", clean_rep, clean_outs, [],
+             goodput_frac=1.0, token_parity=1.0),
+        _row("serve_chaos/storm", storm_rep, storm_outs, injected,
+             goodput_frac=goodput, token_parity=parity),
+    ]
+    emit(rows, "serve_chaos")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter trace (CI shard)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serve_chaos.json to the CWD")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="override trace length")
+    args = ap.parse_args()
+    if args.json:
+        set_json_dir(os.getcwd())
+    n = args.requests or (6 if args.smoke else 10)
+    run(n)
+
+
+if __name__ == "__main__":
+    main()

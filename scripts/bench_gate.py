@@ -52,7 +52,8 @@ import os
 import sys
 
 FILES = ("BENCH_kernels.json", "BENCH_bandwidth.json", "BENCH_train.json",
-         "BENCH_collectives.json", "BENCH_faults.json", "BENCH_serve.json")
+         "BENCH_collectives.json", "BENCH_faults.json", "BENCH_serve.json",
+         "BENCH_serve_chaos.json")
 EXACT_KEYS = ("stream_bytes", "measured_bytes", "dense_bytes", "index_bytes",
               "ici_bytes", "ici_dense_bytes", "ici_predicted_bytes",
               "kv_bytes_measured", "kv_bytes_dense", "kv_pages")
@@ -317,6 +318,79 @@ def gate_serve(fresh_path: str) -> list[str]:
     return errors
 
 
+def gate_serve_chaos(fresh_path: str) -> list[str]:
+    """Absolute acceptance check on the fresh serving-resilience
+    artifact (no baseline involvement): under the deterministic fault
+    storm the engine must keep >= 70% of the clean run's goodput, every
+    request it completes must be token-bitwise-equal to the clean run
+    (``token_parity == 1`` — crash recovery resumes from paged
+    compressed KV without replaying or altering generated tokens), at
+    least one crash must actually have been recovered, the page
+    breaker's trip count must match the count the armed plan implies
+    (and be nonzero — the storm is sized to trip it), the breaker must
+    have closed again before the run ended, and the SLO fractions must
+    be sane. A missing artifact is fine (the chaos-serve shard may not
+    have run); a present artifact without the storm row is a failure."""
+    if not os.path.exists(fresh_path):
+        print("bench_gate: no fresh BENCH_serve_chaos.json — skipping the "
+              "serving-resilience acceptance check (chaos-serve shard "
+              "not run)")
+        return []
+    try:
+        fresh = _rows(fresh_path)
+    except (json.JSONDecodeError, KeyError):
+        return [f"{os.path.basename(fresh_path)}: unreadable — cannot check "
+                f"the serving-resilience acceptance rows"]
+    errors = []
+    storm = fresh.get("serve_chaos/storm")
+    if storm is None:
+        return [f"{os.path.basename(fresh_path)}: serve_chaos/storm row "
+                f"missing — the bench emitted nothing to accept"]
+    if "serve_chaos/clean" not in fresh:
+        errors.append("serve_chaos/clean baseline row missing — goodput has "
+                      "nothing it was measured against")
+    need = ("goodput_frac", "token_parity", "crash_recoveries",
+            "breaker_trips", "breaker_trips_expected", "breaker_recovered",
+            "shed_frac", "deadline_miss_frac", "faults_injected")
+    missing = [k for k in need if k not in storm]
+    if missing:
+        return errors + [f"serve_chaos/storm: columns missing: {missing}"]
+    g = float(storm["goodput_frac"])
+    if not g >= 0.70:
+        errors.append(
+            f"serve_chaos/storm: goodput_frac = {g:g} < 0.70 — the fault "
+            f"storm collapsed throughput instead of degrading it")
+    if float(storm["token_parity"]) != 1.0:
+        errors.append(
+            "serve_chaos/storm: token_parity != 1 — a request completed "
+            "under the storm with different tokens than the clean run "
+            "(crash recovery replayed or corrupted generation)")
+    if int(storm["crash_recoveries"]) < 1:
+        errors.append(
+            "serve_chaos/storm: crash_recoveries = 0 — the armed engine "
+            "crash never exercised the snapshot/restore path")
+    trips, expected = (int(storm["breaker_trips"]),
+                       int(storm["breaker_trips_expected"]))
+    if trips != expected or expected < 1:
+        errors.append(
+            f"serve_chaos/storm: breaker_trips {trips} != expected "
+            f"{expected} (or storm not sized to trip) — detection is no "
+            f"longer 1:1 with the armed plan")
+    if float(storm["breaker_recovered"]) != 1.0:
+        errors.append(
+            "serve_chaos/storm: breaker_recovered != 1 — the page breaker "
+            "never closed again (half-open probes not reaching the "
+            "compressed path?)")
+    if int(storm["faults_injected"]) < 1:
+        errors.append("serve_chaos/storm: faults_injected = 0 — the plan "
+                      "armed nothing")
+    for key in ("shed_frac", "deadline_miss_frac"):
+        v = float(storm[key])
+        if not 0.0 <= v <= 1.0:
+            errors.append(f"serve_chaos/storm: {key} = {v:g} outside [0, 1]")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -391,6 +465,17 @@ def main() -> None:
               f"within the index-padding bound -> "
               f"{'FAIL' if serve_errs else 'ok'}")
     all_errors.extend(serve_errs)
+
+    # absolute serving-resilience acceptance (baseline-independent):
+    # goodput holds under the storm, crash recovery is token-exact, and
+    # the breaker trips and recovers 1:1 with the armed plan
+    chaos_path = os.path.join(args.fresh, "BENCH_serve_chaos.json")
+    chaos_errs = gate_serve_chaos(chaos_path)
+    if os.path.exists(chaos_path):
+        print(f"bench_gate: BENCH_serve_chaos.json goodput >= 0.70, token "
+              f"parity, breaker trip/recover 1:1 -> "
+              f"{'FAIL' if chaos_errs else 'ok'}")
+    all_errors.extend(chaos_errs)
 
     if all_errors:
         print("\nbench_gate FAILED:", file=sys.stderr)

@@ -12,7 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # trajectory, not ratchet against their own previous output. Falls back to
 # the working-tree copy outside a git checkout.
 mkdir -p .bench-baseline
-for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json BENCH_faults.json BENCH_serve.json; do
+for f in BENCH_kernels.json BENCH_bandwidth.json BENCH_train.json BENCH_collectives.json BENCH_faults.json BENCH_serve.json BENCH_serve_chaos.json; do
     if ! git show "HEAD:$f" > ".bench-baseline/$f" 2>/dev/null; then
         # a failed `git show` leaves a truncated file — replace it with
         # the working-tree copy, or remove it so the gate's first-run
@@ -129,6 +129,49 @@ print(f"  BENCH_serve.json: {len(rows)} rows, continuous at "
       f"{cont['requests_per_s']} req/s "
       f"({cont['speedup_vs_sequential']}x sequential), zero_frac "
       f"{cont['zero_frac']} OK")
+EOF
+
+# -- chaos-serve shard: the same engine under a deterministic fault
+# storm (engine crash + page-ingest corruption burst) with deadlines, a
+# bounded queue and the page-boundary circuit breaker armed. Produces
+# the gated BENCH_serve_chaos.json resilience artifact.
+echo "== chaos-serve shard (resilient serving): serve chaos bench =="
+python -m benchmarks.serve_chaos_bench --smoke --json
+
+echo "== BENCH_serve_chaos.json schema + resilience-contract columns =="
+python - <<'EOF'
+import json, sys
+try:
+    with open("BENCH_serve_chaos.json") as f:
+        doc = json.load(f)
+except FileNotFoundError:
+    sys.exit("FAIL: BENCH_serve_chaos.json missing (serve_chaos_bench "
+             "--json did not write it)")
+except json.JSONDecodeError as e:
+    sys.exit(f"FAIL: BENCH_serve_chaos.json is not valid JSON: {e}")
+for key in ("bench", "schema_version", "generated_unix", "rows"):
+    if key not in doc:
+        sys.exit(f"FAIL: BENCH_serve_chaos.json missing key {key!r}")
+rows = {r["name"]: r for r in doc["rows"]}
+for name in ("serve_chaos/clean", "serve_chaos/storm"):
+    if name not in rows:
+        sys.exit(f"FAIL: BENCH_serve_chaos.json missing row {name}")
+storm = rows["serve_chaos/storm"]
+for k in ("us_per_call", "goodput_frac", "token_parity", "n_shed",
+          "shed_frac", "deadline_misses", "deadline_miss_frac",
+          "crash_recoveries", "recovered_requests", "breaker_trips",
+          "breaker_trips_expected", "breaker_probes", "breaker_recovered",
+          "pages_breaker_dense", "faults_injected"):
+    if not isinstance(storm.get(k), (int, float)):
+        sys.exit(f"FAIL: serve_chaos/storm missing numeric column {k!r}: "
+                 f"{storm.get(k)!r}")
+if rows["serve_chaos/clean"]["faults_injected"] != 0:
+    sys.exit("FAIL: the clean row recorded injected faults — the baseline "
+             "run is not fault-free")
+print(f"  BENCH_serve_chaos.json: {len(rows)} rows, storm goodput "
+      f"{storm['goodput_frac']} of clean, {storm['crash_recoveries']} crash "
+      f"recoveries, breaker trips {storm['breaker_trips']}"
+      f"/{storm['breaker_trips_expected']} expected OK")
 EOF
 
 echo "== BENCH_collectives.json schema + byte-contract columns =="

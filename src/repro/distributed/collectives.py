@@ -61,6 +61,8 @@ from .ctx import comm_axis
 _log = logging.getLogger("repro.collectives")
 _DEGRADE_LOGGED: set[tuple[str, str, str]] = set()
 
+RING_SITE = "ring"   # ft.breaker site label for the collectives hop boundary
+
 
 # ---------------------------------------------------------------------------
 # shard_map / axis-size compat
@@ -451,6 +453,13 @@ def resolve_comms(backend_name: str, *, rows: int, cols: int,
         return "dense", "single-device"
     if rows % bs or cols % bc:
         return "dense", "non-divisible"
+    from ..ft.breaker import active_board
+    board = active_board()
+    if board is not None and not board.allow(RING_SITE):
+        # per-boundary circuit breaker (ft.breaker): repeated classified
+        # CorruptStream detections on the ring hop trip the whole
+        # exchange to dense until a half-open probe passes
+        return "dense", "breaker-open"
     return "compressed", None
 
 

@@ -1,12 +1,26 @@
-from .supervisor import FTConfig, StepSupervisor, remesh_state  # noqa: F401
+from .supervisor import (  # noqa: F401
+    FailurePolicy,
+    FTConfig,
+    StepSupervisor,
+    remesh_state,
+)
 from .faults import (  # noqa: F401
     CorruptStream,
+    DeadlineExceeded,
     DeviceLoss,
     FaultError,
+    Overload,
     PoisonBatch,
     TransientStep,
     classify,
     policy_for,
+)
+from .breaker import (  # noqa: F401
+    BreakerBoard,
+    BreakerConfig,
+    CircuitBreaker,
+    active_board,
+    breaker_scope,
 )
 from .inject import (  # noqa: F401
     Fault,
@@ -14,6 +28,7 @@ from .inject import (  # noqa: F401
     active_plan,
     corrupt_file,
     corrupt_map,
+    crash_tap,
     crashing_step,
     inject,
     ring_hop_tap,

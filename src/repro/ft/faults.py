@@ -24,6 +24,15 @@ class              policy (``policy_for``)
 ``DeviceLoss``     ``remesh`` — the device topology changed; the state
                    must be re-sharded over the live devices
                    (``ft.supervisor.remesh_state``) before stepping.
+``DeadlineExceeded``  ``shed`` — a request blew its SLO (TTL in engine
+                   ticks). The scheduler drops it with
+                   ``status="shed"``; nothing about the *system* is
+                   wrong, so it is logged but NOT counted against
+                   ``max_failures``.
+``Overload``       ``shed`` — the bounded pending queue overflowed.
+                   Same accounting as ``DeadlineExceeded``: load
+                   shedding is the system working as designed, not a
+                   failure budget event.
 =================  =====================================================
 
 Everything else — ``KeyboardInterrupt``, ``SystemExit``, assertion and
@@ -54,12 +63,26 @@ class DeviceLoss(FaultError):
     """The device topology changed under the job."""
 
 
+class DeadlineExceeded(FaultError):
+    """A request blew its deadline (TTL in engine ticks) — shed it."""
+
+
+class Overload(FaultError):
+    """The bounded pending queue overflowed — shed the newest arrivals."""
+
+
 POLICIES: dict[type, str] = {
     CorruptStream: "recompute-dense",
     TransientStep: "restore-retry",
     PoisonBatch: "skip-batch",
     DeviceLoss: "remesh",
+    DeadlineExceeded: "shed",
+    Overload: "shed",
 }
+
+# policies that are normal-operation outcomes, not system failures:
+# the supervisor logs them but never counts them toward max_failures
+SHED_POLICIES = ("shed",)
 
 # Exception text markers that identify a known transient-infrastructure
 # failure when the raiser didn't use the taxonomy (e.g. jaxlib's
@@ -78,7 +101,8 @@ def classify(exc: BaseException) -> type[FaultError] | None:
     (including ``KeyboardInterrupt``/``SystemExit``, which are not even
     ``Exception``s) is unclassified."""
     if isinstance(exc, FaultError):
-        for cls in (CorruptStream, TransientStep, PoisonBatch, DeviceLoss):
+        for cls in (CorruptStream, TransientStep, PoisonBatch, DeviceLoss,
+                    DeadlineExceeded, Overload):
             if isinstance(exc, cls):
                 return cls
         return TransientStep

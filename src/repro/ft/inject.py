@@ -44,7 +44,11 @@ Fault kinds over one stream (all detected by ``compress.integrity``):
 ``drop_hop``   zero the payload arriving at ring hop ``arg``
                (:func:`ring_hop_tap` only)
 ``crash``      raise from the step function at step ``arg``
-               (:func:`crashing_step` only)
+               (:func:`crashing_step`), or — at site ``"engine_tick"``
+               via :func:`crash_tap` — kill the serving engine's tick
+               loop at tick ``arg`` (the crash-recoverable-loop chaos
+               path: the supervised engine restores its last snapshot
+               and re-admits in-flight requests from their paged KV)
 =============  ==========================================================
 """
 from __future__ import annotations
@@ -62,6 +66,8 @@ from .faults import TransientStep
 
 STREAM_KINDS = ("bitflip", "truncate", "nan", "value", "count")
 HOP_KINDS = ("drop_hop",)
+CRASH_KINDS = ("crash",)
+ENGINE_TICK_SITE = "engine_tick"   # crash_tap's site in the serve loop
 
 
 @dataclasses.dataclass
@@ -86,13 +92,18 @@ class FaultPlan:
         self._remaining = [f.times for f in self.faults]
         self.injected: list[tuple[str, str]] = []
 
-    def take(self, kinds: tuple[str, ...], site: str) -> Fault | None:
+    def take(self, kinds: tuple[str, ...], site: str,
+             arg: int | None = None) -> Fault | None:
         """Consume (at trace time) the first live fault matching this
-        tap, or None."""
+        tap, or None. ``arg`` additionally requires an exact ``f.arg``
+        match — crash faults name their target tick and must not fire
+        at any other (position-style args keep the default any-match)."""
         for i, f in enumerate(self.faults):
             if f.kind not in kinds or self._remaining[i] == 0:
                 continue
             if f.site != "*" and f.site != site:
+                continue
+            if arg is not None and f.arg != arg:
                 continue
             if self._remaining[i] > 0:
                 self._remaining[i] -= 1
@@ -250,6 +261,23 @@ def corrupt_file(path: str, *, offset: int | None = None) -> None:
 # ---------------------------------------------------------------------------
 # Step-level faults
 # ---------------------------------------------------------------------------
+
+def crash_tap(tick: int, *, site: str = ENGINE_TICK_SITE) -> None:
+    """Kill point in the serving engine's tick loop: raises
+    ``TransientStep`` when the armed plan carries a
+    ``Fault("crash", site="engine_tick", arg=<tick>)`` for exactly this
+    tick. The supervised engine classifies it, restores its last
+    snapshot and re-admits the in-flight lanes from their paged KV —
+    the chaos tests assert token parity against the un-crashed run."""
+    plan = active_plan()
+    if plan is None:
+        return
+    f = plan.take(CRASH_KINDS, site, arg=int(tick))
+    if f is None:
+        return
+    plan.note(f.kind, site)
+    raise TransientStep(f"injected engine crash at {site} tick {int(tick)}")
+
 
 def crashing_step(step_fn: Callable, crash_at: int,
                   exc: Callable[[], BaseException] | None = None,

@@ -50,8 +50,67 @@ class FTConfig:
     backoff_base_s: float = 0.05       # restore backoff: base * 2**(k-1),
     backoff_cap_s: float = 2.0         # capped, +- jitter
     backoff_jitter: float = 0.25       # fraction of the delay randomized
+    jitter_seed: int = 0               # per-supervisor jitter stream —
+                                       # concurrent supervisors (train +
+                                       # serve) must not share one and
+                                       # re-stampede in lockstep
     max_poison_skips: int = 3          # consecutive poison batches before
                                        # the job is declared sick (re-raise)
+
+
+class FailurePolicy:
+    """The classify -> log -> count -> backoff -> decay core shared by the
+    train-loop :class:`StepSupervisor` and the serve engine's supervised
+    tick loop (``serve.engine.ServeEngine.run`` with an ``FTConfig``).
+
+    One instance = one failure budget: ``count()`` charges a recorded
+    failure against ``cfg.max_failures`` and says whether the budget
+    still holds; ``note_success()`` decays it (one failure forgiven per
+    ``failure_decay_steps`` consecutive successes). Classes whose policy
+    is in ``faults.SHED_POLICIES`` (``DeadlineExceeded``/``Overload``)
+    are *logged but never counted* — load shedding is the system working
+    as designed, and a storm of shed requests must not exhaust the
+    budget that exists to catch crash loops. Backoff delays stay within
+    ``backoff_cap_s * (1 + backoff_jitter)`` for any ``jitter_seed``."""
+
+    def __init__(self, cfg: FTConfig):
+        self.cfg = cfg
+        self.failures = 0
+        self.failure_log: list[dict] = []
+        self._streak = 0
+        self._rng = np.random.default_rng(cfg.jitter_seed)
+
+    def record(self, cls: type, step: int, exc: BaseException) -> str:
+        """Append one classified failure to the log; returns its policy
+        name (``"shed"`` entries are the caller's cue to skip
+        :meth:`count` entirely)."""
+        policy = ft_faults.POLICIES[cls]
+        self.failure_log.append(
+            {"step": step, "class": cls.__name__, "policy": policy,
+             "error": f"{type(exc).__name__}: {exc}", "time": time.time()})
+        return policy
+
+    def count(self) -> bool:
+        """Charge one failure against the budget; False = exhausted."""
+        self.failures += 1
+        self._streak = 0
+        return self.failures <= self.cfg.max_failures
+
+    def note_success(self) -> None:
+        self._streak += 1
+        if self.failures > 0 and self._streak >= self.cfg.failure_decay_steps:
+            self.failures -= 1
+            self._streak = 0
+
+    def backoff(self) -> float:
+        """Exponential backoff with jitter for the k-th restore since the
+        last forgiven failure — herd restarts after a shared-infra blip
+        must not re-stampede the same resource in lockstep."""
+        k = max(self.failures, 1)
+        base = min(self.cfg.backoff_base_s * (2.0 ** (k - 1)),
+                   self.cfg.backoff_cap_s)
+        jit = 1.0 + self.cfg.backoff_jitter * (2.0 * self._rng.random() - 1.0)
+        return max(base * jit, 0.0)
 
 
 class StepSupervisor:
@@ -61,11 +120,23 @@ class StepSupervisor:
         self.hb_path = cfg.heartbeat_path or os.path.join(cfg.ckpt_dir, "heartbeat.json")
         self.times: deque[float] = deque(maxlen=cfg.straggler_window)
         self.straggler_events: list[dict] = []
-        self.failures = 0
-        self.failure_log: list[dict] = []
+        self.policy = FailurePolicy(cfg)   # classify/backoff/decay core,
+                                           # shared with the serve loop
         self.skipped_batches: list[dict] = []
-        self._rng = np.random.default_rng(0)   # jitter only — deterministic
-                                               # runs stay deterministic
+
+    # failure-budget state lives on the shared FailurePolicy; these
+    # properties keep the supervisor's public surface (tests, callers)
+    @property
+    def failures(self) -> int:
+        return self.policy.failures
+
+    @failures.setter
+    def failures(self, v: int) -> None:
+        self.policy.failures = v
+
+    @property
+    def failure_log(self) -> list[dict]:
+        return self.policy.failure_log
 
     # ------------------------------------------------------------------
     def resume_or_init(self, init_fn: Callable[[], Any], like: Any | None = None):
@@ -105,14 +176,7 @@ class StepSupervisor:
 
     # ------------------------------------------------------------------
     def _backoff(self) -> float:
-        """Exponential backoff with jitter for the k-th restore since the
-        last forgiven failure — herd restarts after a shared-infra blip
-        must not re-stampede the same resource in lockstep."""
-        k = max(self.failures, 1)
-        base = min(self.cfg.backoff_base_s * (2.0 ** (k - 1)),
-                   self.cfg.backoff_cap_s)
-        jit = 1.0 + self.cfg.backoff_jitter * (2.0 * self._rng.random() - 1.0)
-        return max(base * jit, 0.0)
+        return self.policy.backoff()
 
     def run(self, state, step_fn: Callable, data_iter, steps: int,
             start_step: int = 0, loader_state_fn=None,
@@ -136,7 +200,6 @@ class StepSupervisor:
         successes, so a week-long job with an occasional blip never
         exhausts the budget that exists to catch crash loops."""
         step = start_step
-        streak = 0
         poison_run = 0
         while step < steps:
             batch = next(data_iter)
@@ -153,10 +216,10 @@ class StepSupervisor:
                 cls = ft_faults.classify(e)
                 if cls is None:
                     raise              # a bug, not a fault
-                policy = ft_faults.POLICIES[cls]
-                self.failure_log.append(
-                    {"step": step, "class": cls.__name__, "policy": policy,
-                     "error": f"{type(e).__name__}: {e}", "time": time.time()})
+                pol = self.policy.record(cls, step, e)
+                if pol in ft_faults.SHED_POLICIES:
+                    step += 1          # shed: logged, never counted — the
+                    continue           # work unit is dropped by design
                 if cls is PoisonBatch:
                     poison_run += 1
                     self.skipped_batches.append(
@@ -173,14 +236,12 @@ class StepSupervisor:
                     _log.warning("device loss at step %d: re-meshing (%s)",
                                  step, e)
                     state = on_device_loss(state)
-                    streak = 0
+                    self.policy._streak = 0
                     continue           # retry the step on the new mesh
-                self.failures += 1
-                streak = 0
+                within_budget = self.policy.count()
                 self.ckpt.wait()   # an in-flight async save may be the newest
                                    # restore point — land it before deciding
-                if self.failures > self.cfg.max_failures or \
-                        self.ckpt.latest_step() is None:
+                if not within_budget or self.ckpt.latest_step() is None:
                     raise
                 delay = self._backoff()
                 _log.warning("%s at step %d (%s): restoring after %.2fs "
@@ -195,10 +256,7 @@ class StepSupervisor:
             dt = time.time() - t0
             step += 1
             poison_run = 0
-            streak += 1
-            if self.failures > 0 and streak >= self.cfg.failure_decay_steps:
-                self.failures -= 1
-                streak = 0
+            self.policy.note_success()
             self.check_straggler(dt)
             if step % 10 == 0 or step == steps:
                 self.heartbeat(step, metrics)

@@ -73,6 +73,20 @@ def main() -> None:
                     help="evict a lane to the compressed pool after this "
                          "many consecutive steps while requests wait "
                          "(0 = never)")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="per-request TTL in engine ticks (continuous "
+                         "mode): a request that cannot finish by "
+                         "arrival + TTL given the slot clock is shed at "
+                         "admission, and a lane past its TTL is "
+                         "cancelled mid-flight (0 = no deadlines)")
+    ap.add_argument("--queue-bound", type=int, default=0,
+                    help="bounded pending queue (continuous mode): "
+                         "arrived waiters beyond this count are shed, "
+                         "newest fresh arrivals first (0 = unbounded)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the continuous engine loop under the "
+                         "crash-recoverable supervisor (per-tick "
+                         "snapshots + classified restore/backoff)")
     args = ap.parse_args()
 
     backend = args.backend or ("stream" if args.use_kernel else "")
@@ -162,23 +176,37 @@ _SPOT_CHECK = itertools.count()        # rotates the sampled leaf per call
 
 
 def validate_state_ingest(cstate, dense_state, level: str,
-                          site: str = "serve"):
+                          site: str = "serve", breaker=None):
     """Validate every ``CompressedMap`` leaf of a handoff tree at the
     consumer boundary; a corrupt leaf is replaced by its dense source
     (the ``ft.faults`` "recompute-dense" policy, applied per leaf) so one
     bad stream degrades ONE cache's transport instead of failing the
     batch. An armed chaos plan (``ft.inject``) with a stream fault at
     ``site`` corrupts leaves here — after compression, before
-    validation — exercising the real ingest path. Returns
-    ``(tree, n_recovered)``."""
+    validation — exercising the real ingest path.
+
+    The handoff is also a circuit-breaker boundary: pass a
+    ``ft.breaker.BreakerBoard`` (or arm one ambiently via
+    ``breaker_scope``) and per-leaf detections feed its trip window;
+    with the site OPEN the whole tree degrades to its dense source
+    wholesale — no per-leaf validate+fallback — until half-open probes
+    pass. Returns ``(tree, n_recovered)``."""
     from ..compress import CompressedMap
     from ..compress.integrity import validate_map
+    from ..ft.breaker import active_board
     from ..ft.faults import CorruptStream
     from ..ft.inject import STREAM_KINDS, active_plan, corrupt_map
 
     is_cm = lambda l: isinstance(l, CompressedMap)
     dense_leaves = jax.tree_util.tree_leaves(dense_state)
     c_leaves, treedef = jax.tree_util.tree_flatten(cstate, is_leaf=is_cm)
+    board = breaker if breaker is not None else active_board()
+    if board is not None:
+        board.tick()                        # call-counted breaker clock
+        if not board.allow(site):
+            out = [d if is_cm(c) else c
+                   for d, c in zip(dense_leaves, c_leaves)]
+            return jax.tree_util.tree_unflatten(treedef, out), 0
     plan = active_plan()
     out, n_bad = [], 0
     for i, (d, c) in enumerate(zip(dense_leaves, c_leaves)):
@@ -193,8 +221,12 @@ def validate_state_ingest(cstate, dense_state, level: str,
         try:
             validate_map(c, level=level, site=f"{site}:leaf{i}")
             out.append(c)
+            if board is not None and level != "off":
+                board.record_success(site)
         except CorruptStream as e:
             n_bad += 1
+            if board is not None:
+                board.record_failure(site)
             print(f"[serve] {e} — leaf {i} recovered from its dense source")
             out.append(d)
     return jax.tree_util.tree_unflatten(treedef, out), n_bad
@@ -288,21 +320,26 @@ def model_prefill_pad(prefill_fn, params, prompts, cache_len, enc=None,
 def serve_continuous(args, cfg, mesh, model, params) -> None:
     """``--requests N``: run a synthetic heavy-traffic trace through the
     continuous-batching engine and print its throughput report."""
+    from ..ft import FTConfig
     from ..serve import ServeEngine, synthetic_trace
 
     eng = ServeEngine(model, params, mesh, n_slots=args.slots,
                       max_cache_len=pow2_ceil(args.prompt_len + args.gen),
                       page_tokens=args.page_tokens,
                       validation=args.validate,
-                      temperature=args.temperature, seed=args.seed)
+                      temperature=args.temperature, seed=args.seed,
+                      queue_bound=args.queue_bound)
     trace = synthetic_trace(
         args.requests, vocab=cfg.vocab, seed=args.seed,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
-        gen_lo=max(args.gen // 4, 1), gen_hi=args.gen)
-    rep = eng.run(trace, preempt_after=args.preempt_after)
+        gen_lo=max(args.gen // 4, 1), gen_hi=args.gen,
+        deadline_ticks=args.deadline_ticks or None)
+    ft_cfg = FTConfig(jitter_seed=args.seed) if args.supervise else None
+    rep = eng.run(trace, preempt_after=args.preempt_after, ft_cfg=ft_cfg)
     print(f"[serve] {cfg.name} continuous: {rep['n_requests']} requests "
-          f"({rep['n_rejected']} rejected) in {rep['wall_s']:.2f} s "
-          f"over {args.slots} slots")
+          f"({rep['n_rejected']} rejected, {rep['n_shed']} shed, "
+          f"{rep['deadline_misses']} deadline misses) in "
+          f"{rep['wall_s']:.2f} s over {args.slots} slots")
     print(f"  {rep['requests_per_s']:.2f} req/s  {rep['tokens_per_s']:.1f} "
           f"tok/s  p50 {rep['p50_token_ms']:.1f} ms/token  "
           f"p95 {rep['p95_token_ms']:.1f} ms/token  "

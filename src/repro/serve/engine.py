@@ -30,6 +30,23 @@ continuous batching. When ``Pb == P`` the last prompt token is replayed
 at ``pos = P - 1`` (rewriting its own KV with the identical value) to
 produce the first sampled token; prompts shorter than the smallest
 prefill bucket skip prefill entirely and teacher-force from ``pos 0``.
+
+Resilience (PR 10)
+------------------
+``run(..., ft_cfg=FTConfig(...))`` supervises the tick loop with the
+same classify/backoff/decay policy as the training supervisor
+(``ft.supervisor.FailurePolicy``): each tick starts from a snapshot
+(every lane paged out to the pool + a deep copy of the host
+bookkeeping), and a classified crash (``ft.inject.crash_tap`` at site
+``"engine_tick"``) restores the snapshot and re-admits the in-flight
+requests from their already-paged compressed KV — generated tokens are
+kept, not replayed, and greedy decoding makes the recovered run
+token-identical to an un-crashed one. Deadlines (``Request.deadline``)
+are enforced at admission (shed what cannot finish in time) and
+mid-flight (cancel a lane past its TTL); the pending queue is bounded
+by ``queue_bound`` with overload shedding; and a per-site
+:class:`~repro.ft.breaker.BreakerBoard` trips persistently-corrupt
+stream boundaries (page ingest) to their dense path wholesale.
 """
 from __future__ import annotations
 
@@ -41,6 +58,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..ft.breaker import BreakerBoard, BreakerConfig
+from ..ft.faults import classify as ft_classify
+from ..ft.inject import crash_tap
+from ..ft.supervisor import FailurePolicy, FTConfig
 from ..launch.steps import make_decode_slotted, make_prefill
 from ..models.lm import LM
 from .bucket import bucket_ladder, pow2_bucket, pow2_ceil, pow2_floor
@@ -59,7 +80,9 @@ class ServeEngine:
                  max_cache_len: int = 256, page_tokens: int = 16,
                  min_prefill: int = 8, validation: str = "off",
                  temperature: float = 0.0, seed: int = 0,
-                 use_kernel_codec: bool = False):
+                 use_kernel_codec: bool = False, queue_bound: int = 0,
+                 max_hot_positions: int = 0,
+                 breaker: BreakerConfig | None = None):
         cfg = model.cfg
         if cfg.encoder_layers:
             raise NotImplementedError("ServeEngine serves decoder-only "
@@ -91,10 +114,22 @@ class ServeEngine:
                              min_prefill))
         self.decode_shape_bound = len(self.batch_ladder) * len(self.cache_ladder)
 
+        # resilience knobs: bounded pending queue (0 = unbounded), hot-set
+        # position budget Bb*C (0 = unbounded; drives the "later" fits
+        # verdict), and the per-boundary circuit breaker board the pool
+        # consults at page ingest
+        self.queue_bound = queue_bound
+        self.max_hot_positions = max_hot_positions
+        self.board = BreakerBoard(breaker)
+        self.crash_recoveries = 0
+        self._supervised = False
+        self._deferred_free: list = []
+
         self.pool = PagedKVPool(page_tokens=page_tokens,
                                 bs=cfg.zebra_block_seq, bc=cfg.zebra_block_ch,
                                 validation=validation,
-                                use_kernel=use_kernel_codec)
+                                use_kernel=use_kernel_codec,
+                                breaker=self.board)
         self._prefill = jax.jit(make_prefill(model, mesh))
         self._decode = jax.jit(make_decode_slotted(model, mesh, temperature),
                                donate_argnums=self.DONATE_ARGNUMS)
@@ -163,14 +198,40 @@ class ServeEngine:
         return pow2_bucket(max(r.total_len, self.c_lo), lo=self.c_lo,
                            hi=self.cache_ladder[-1])
 
-    def _fits(self, r: Request) -> bool:
+    def _fits(self, r: Request, n_active: int | None = None) -> str:
+        """Admission verdict: ``"never"`` = this engine can never cache
+        the request (empty prompt / total beyond the ladder — terminal
+        reject); ``"later"`` = admitting it NOW would blow the hot-set
+        position budget ``max_hot_positions`` (lanes x cache bucket), a
+        transient condition that clears as lanes retire — the scheduler
+        keeps it queued; ``"ok"`` otherwise."""
         if r.prompt_len < 1:
-            return False
+            return "never"
         try:
-            self._req_cache_bucket(r)
+            Cr = self._req_cache_bucket(r)
         except ValueError:
-            return False
-        return True
+            return "never"
+        if self.max_hot_positions > 0:
+            if n_active is None:
+                n_active = sum(x is not None for x in self._lanes)
+            C = max(self._C, Cr)               # grow-only cache bucket
+            Bb = pow2_bucket(max(n_active + 1, 1), lo=1, hi=self.n_slots)
+            if Bb * C > self.max_hot_positions:
+                # infeasible even alone -> never (C never shrinks here,
+                # so waiting can't help); otherwise genuinely transient
+                if n_active == 0:
+                    return "never"
+                return "later"
+        return "ok"
+
+    def _min_ticks(self, r: Request) -> int:
+        """Minimum engine ticks to finish ``r`` if admitted right now —
+        the slot clock the deadline-aware admission measures against
+        (teacher-forced tail + decode, no queueing or preemption)."""
+        if r.pos > 0:                          # resuming paged progress
+            return max(r.total_len - 1 - r.pos, 0)
+        fed = min(self._prefill_bucket(r.prompt_len), r.prompt_len - 1)
+        return max(r.total_len - 1 - fed, 0)
 
     def _prefill_bucket(self, P: int) -> int:
         pb = pow2_floor(P)
@@ -182,7 +243,11 @@ class ServeEngine:
         way the caches cross the engine boundary in stream form — fresh
         prefills round-trip through the pool so page ingest validation
         and byte metering cover admission traffic too."""
-        if r.rid in self.pool:                 # evicted earlier: resume
+        if r.rid in self.pool and r.pos > 0:   # evicted/crashed: resume
+            # the pos > 0 guard matters after a crash restore: a request
+            # that was rolled back to before its first step may still
+            # have a post-snapshot slab in the pool, but its restored
+            # next_tok/fed bookkeeping belongs to the fresh-prefill path
             return self.pool.page_in(r.rid)
         P = r.prompt_len
         pb = self._prefill_bucket(P)
@@ -218,7 +283,16 @@ class ServeEngine:
             if r is not None and sched.should_preempt(r):
                 self._evict(lane, tick)
         n_active = sum(r is not None for r in self._lanes)
-        admitted = sched.admit(tick, self.n_slots - n_active, self._fits)
+        pending_admits = {"n": 0}
+
+        def fits(r):
+            # sequential admits within one tick see the growing batch
+            v = self._fits(r, n_active + pending_admits["n"])
+            if v == "ok":
+                pending_admits["n"] += 1
+            return v
+        admitted = sched.admit(tick, self.n_slots - n_active, fits,
+                               eta=self._min_ticks)
         for r in admitted:
             r.t_submit = r.t_submit or now
         new_active = [r for r in self._lanes if r is not None] + admitted
@@ -286,31 +360,156 @@ class ServeEngine:
                 r.t_first = now
         return now
 
+    def _free_slab(self, rid) -> None:
+        """Free a request's pool slab — deferred while supervised: a
+        restore to the last snapshot rolls back post-snapshot retires
+        and cancels, and their slabs must still be there to resume
+        from. Deferred frees flush at the next snapshot (by then any
+        restore lands at or after it) or at end of run."""
+        if self._supervised:
+            self._deferred_free.append(rid)
+        else:
+            self.pool.free(rid)
+
     def _retire(self, now: float) -> None:
         for lane, r in enumerate(self._lanes):
             if r is not None and r.done:
                 r.t_done = now
                 self.scheduler.retire(r)
-                self.pool.free(r.rid)
+                self._free_slab(r.rid)
                 self._lanes[lane] = None
 
+    def _cancel_deadlines(self, tick: int) -> None:
+        """Mid-flight SLO enforcement: a lane past its TTL is cancelled
+        (shed with reason ``"deadline"``) — finishing it late serves
+        nobody and starves requests that can still meet theirs."""
+        for lane, r in enumerate(self._lanes):
+            if r is not None and r.deadline is not None \
+                    and tick > r.deadline and not r.done:
+                self._lanes[lane] = None
+                self._free_slab(r.rid)
+                self.scheduler.shed(r, "deadline")
+
     # ------------------------------------------------------------------
-    def run(self, requests: list[Request], *, preempt_after: int = 0) -> dict:
-        """Serve a trace to completion; returns the throughput report."""
-        self.scheduler = Scheduler(requests, preempt_after=preempt_after)
+    # crash-recovery snapshots
+    # ------------------------------------------------------------------
+    def _snapshot(self, tick: int) -> dict:
+        """Consistent restore point as of the START of ``tick``: every
+        lane paged out to the pool (compressed, metered — snapshot
+        traffic is real traffic) + a deep copy of the host bookkeeping.
+        Lanes keep running from the dense hot set; the paged copy is
+        only read back on restore."""
+        for rid in self._deferred_free:       # committed: restores from
+            self.pool.free(rid)               # now on land at >= this tick
+        self._deferred_free.clear()
+        for lane, r in enumerate(self._lanes):
+            if r is not None:
+                self.pool.page_out(r.rid, self._take_lane(lane))
+        return {"tick": tick, "step_no": self._step_no,
+                "Bb": self._Bb, "C": self._C,
+                "lanes": [r.rid if r is not None else None
+                          for r in self._lanes],
+                "sched": self.scheduler.snapshot()}
+
+    def _restore(self, snap: dict) -> int:
+        """Rebuild the engine at the snapshot: fresh hot set, restored
+        bookkeeping, and every formerly-running lane requeued at the
+        FRONT of the queue (in lane order) — re-admission then flows
+        through ``_admit_tree``'s pool-resume path, so recovery reuses
+        the same page-in machinery as preemption. Tokens generated
+        before the snapshot are kept, not replayed. Returns the tick to
+        resume at."""
+        self.scheduler.restore(snap["sched"])
+        self._step_no = snap["step_no"]
+        self._Bb, self._C = snap["Bb"], snap["C"]
+        self._hot = self.model.init_cache(self._Bb, self._C)
+        self._lanes = [None] * self._Bb
+        self._deferred_free.clear()           # those retires rolled back
+        self.crash_recoveries += 1
+        inflight = [rid for rid in snap["lanes"] if rid is not None]
+        for rid in reversed(inflight):        # appendleft: keep lane order
+            r = self.scheduler._all[rid]
+            r.retries += 1
+            if r.retries > r.retry_budget:
+                self.pool.free(rid)
+                self.scheduler.shed(r, "retry-budget")
+                continue
+            r.recovered = True
+            self.scheduler.requeue_front(r)
+        return snap["tick"]
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], *, preempt_after: int = 0,
+            ft_cfg: FTConfig | None = None, snapshot_every: int = 1) -> dict:
+        """Serve a trace to completion; returns the throughput report.
+
+        With ``ft_cfg`` the loop is supervised: snapshots every
+        ``snapshot_every`` ticks, and a classified failure (e.g. an
+        injected ``crash`` at site ``"engine_tick"``) restores the last
+        snapshot after a jittered backoff instead of killing the run —
+        bounded by ``ft_cfg.max_failures`` exactly like the training
+        supervisor. Shed-policy classes are logged, never counted."""
+        self.scheduler = Scheduler(requests, preempt_after=preempt_after,
+                                   queue_bound=self.queue_bound)
+        policy = FailurePolicy(ft_cfg) if ft_cfg is not None else None
+        self._supervised = policy is not None
+        self._deferred_free = []
+        self.crash_recoveries = 0
+        snap: dict | None = None
+        snap_tick = -1
         tick = 0
+        # the board clock is engine-lifetime monotone (advance() keeps
+        # the max) but ticks restart per run — offset by the clock as of
+        # this run's start so probe deadlines scheduled in an earlier
+        # run (or its warmup) stay reachable
+        board_base = self.board.now
         t0 = now = time.time()
         while True:
-            self._schedule(tick, now)
-            if not any(r is not None for r in self._lanes):
-                nxt = self.scheduler.next_arrival()
-                if nxt is None:
-                    break
-                tick = max(tick + 1, nxt)      # idle until the next arrival
+            try:
+                if policy is not None and tick != snap_tick \
+                        and tick % max(snapshot_every, 1) == 0:
+                    snap = self._snapshot(tick)
+                    snap_tick = tick
+                crash_tap(tick)
+                self.board.advance(board_base + tick)
+                self._cancel_deadlines(tick)
+                self._schedule(tick, now)
+                # bound the queue AFTER admission: what this tick's free
+                # slots absorbed was never "pending" — a burst no wider
+                # than the slots + bound must not shed at all
+                self.scheduler.shed_overflow(tick)
+                if not any(r is not None for r in self._lanes):
+                    nxt = self.scheduler.next_arrival()
+                    if nxt is None:
+                        break
+                    tick = max(tick + 1, nxt)  # idle until the next arrival
+                    continue
+                now = self._step(now)
+                self._retire(now)
+                if policy is not None:
+                    policy.note_success()
+                tick += 1
+            except Exception as e:  # noqa: BLE001 — classified below
+                if policy is None:
+                    raise
+                cls = ft_classify(e)
+                if cls is None:
+                    raise                      # a bug, not a fault
+                pol = policy.record(cls, tick, e)
+                if pol == "shed":
+                    continue                   # already shed by the scheduler
+                if not policy.count() or snap is None:
+                    raise                      # budget exhausted / no restore
+                delay = policy.backoff()
+                if delay:
+                    time.sleep(delay)
+                tick = self._restore(snap)
+                snap_tick = tick               # snap still valid for this tick
                 continue
-            now = self._step(now)
-            self._retire(now)
-            tick += 1
+        for rid in self._deferred_free:
+            self.pool.free(rid)
+        self._deferred_free.clear()
+        self._supervised = False
         wall = time.time() - t0
         return self.report(wall)
 
@@ -333,10 +532,28 @@ class ServeEngine:
             for k in kv:
                 kv[k] += rb[k]
         n_tok = sum(len(r.out) for r in done)
+        total = max(len(self.scheduler._all), 1)
+        sched = self.scheduler
         return {
             "n_requests": len(done),
             "n_rejected": sum(1 for r in self.scheduler.completed
                               if r.status == "rejected"),
+            # --- resilience (SLOs, crash recovery, breaker) ---
+            "n_shed": sched.n_shed,
+            "shed_frac": sched.n_shed / total,
+            "deadline_misses": sched.deadline_misses,
+            "deadline_miss_frac": sched.deadline_misses / total,
+            "deferrals": sched.deferrals,
+            "retries": sum(r.retries for r in sched._all.values()),
+            "crash_recoveries": self.crash_recoveries,
+            "recovered_requests": sum(1 for r in done if r.recovered),
+            "breaker_trips": self.board.trips,
+            "breaker_probes": self.board.probes,
+            "breaker_tripped_sites": self.board.tripped_sites(),
+            "breaker_labels": self.board.labels(),
+            "breakers": self.board.snapshot(),
+            "pages_breaker_dense": self.pool.n_breaker_dense,
+            # --- throughput / latency / bytes ---
             "wall_s": wall,
             "requests_per_s": len(done) / wall if wall else 0.0,
             "tokens_per_s": n_tok / wall if wall else 0.0,

@@ -59,7 +59,7 @@ class PagedKVPool:
 
     def __init__(self, *, page_tokens: int = 16, bs: int = 8, bc: int = 128,
                  validation: str = "off", use_kernel: bool = False,
-                 interpret: bool = True):
+                 interpret: bool = True, breaker=None):
         if page_tokens & (page_tokens - 1) or page_tokens < 1:
             raise ValueError(f"page_tokens must be a power of two, got {page_tokens}")
         self.page_tokens = page_tokens
@@ -67,6 +67,9 @@ class PagedKVPool:
         self.validation = validate_level(validation)
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.breaker = breaker    # ft.breaker.BreakerBoard | None — the
+                                  # page-ingest circuit: open means pages
+                                  # skip compress+validate wholesale
         self.meter = BandwidthMeter()
         self._slabs: dict[Any, _Slab] = {}
         # jitted codecs keyed on (shape, dtype): after warmup every page
@@ -76,6 +79,7 @@ class PagedKVPool:
         self.n_pages_out = 0
         self.n_pages_in = 0
         self.n_recovered = 0      # corrupt pages kept dense at ingest
+        self.n_breaker_dense = 0  # pages sent dense by an OPEN breaker
         self.bytes_out = 0        # stream bytes written to the pool
         self.bytes_in = 0         # stream bytes read back out
 
@@ -142,8 +146,22 @@ class PagedKVPool:
             ax = leaf.ndim - 3
             for p in range(T // pt):
                 page = jax.lax.slice_in_dim(leaf, p * pt, (p + 1) * pt, axis=ax)
-                cm = self._encode(page.reshape(-1, k))
                 name = f"req{rid}/leaf{i}/pg{p}"
+                if self.breaker is not None \
+                        and not self.breaker.allow(PAGE_SITE):
+                    # circuit OPEN: the compressed path at this boundary
+                    # is sick — dense wholesale, skipping compress AND
+                    # the per-page validate+fallback entirely (armed
+                    # chaos faults stay armed: nothing fires on a path
+                    # that never runs)
+                    dense = jnp.asarray(page)
+                    pages.append(dense)
+                    nbytes = int(dense.size) * dense.dtype.itemsize
+                    self.meter.record_dense(f"{name}+breaker-open", nbytes)
+                    self.bytes_out += nbytes
+                    self.n_breaker_dense += 1
+                    continue
+                cm = self._encode(page.reshape(-1, k))
                 if plan is not None:
                     f = plan.take(STREAM_KINDS, PAGE_SITE)
                     if f is not None:
@@ -154,7 +172,10 @@ class PagedKVPool:
                                  site=f"{PAGE_SITE}:{name}")
                 except CorruptStream as e:
                     # per-page dense fallback: ONE page degrades, the
-                    # request's other pages stay compressed
+                    # request's other pages stay compressed — and the
+                    # breaker counts the detection toward its trip window
+                    if self.breaker is not None:
+                        self.breaker.record_failure(PAGE_SITE)
                     self.n_recovered += 1
                     print(f"[pool] {e} — page kept dense")
                     dense = jnp.asarray(page)
@@ -163,6 +184,8 @@ class PagedKVPool:
                     self.meter.record_dense(name, nbytes)
                     self.bytes_out += nbytes
                     continue
+                if self.breaker is not None and self.validation != "off":
+                    self.breaker.record_success(PAGE_SITE)
                 rec = self.meter.record(name, cm)
                 self.bytes_out += rec.measured_bytes
                 self.n_pages_out += 1

@@ -1,0 +1,418 @@
+"""Resilient serving: SLOs, shedding, circuit breakers, crash recovery.
+
+Host-side units for the PR 10 resilience layer — no model in the loop
+(the end-to-end chaos runs live in tests/test_serve.py):
+
+* the per-boundary circuit breaker state machine (trip threshold inside
+  the sliding window, window decay, half-open probe pass/fail, the
+  decayed probe schedule and its cap, close-after-consecutive-passes);
+* the BreakerBoard clock/contextvar wiring, including the collectives'
+  ``resolve_comms`` consulting the ambient board;
+* the new shed fault classes (``DeadlineExceeded``/``Overload``)
+  round-tripping through ``classify`` onto the ``shed`` policy, which
+  the shared ``FailurePolicy`` logs but never counts;
+* the seeded backoff jitter (bounded under ANY seed, distinct across
+  seeds);
+* scheduler SLO policy: deadline-aware admission, the bounded pending
+  queue (fresh arrivals only — work-in-progress is never shed and never
+  squeezes fresh arrivals out), the never/later/ok admission verdicts,
+  and the snapshot/restore round trip crash recovery rides on;
+* ``crash_tap`` firing only at its named tick;
+* the ``gate_serve_chaos`` CI gate's red path (a doctored artifact must
+  produce errors; the committed artifact must not).
+"""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.distributed import collectives as coll
+from repro.distributed.ctx import comm_context
+from repro.ft import (BreakerBoard, BreakerConfig, CircuitBreaker,
+                      DeadlineExceeded, FailurePolicy, Fault, FTConfig,
+                      Overload, TransientStep, active_board, breaker_scope,
+                      classify, crash_tap, inject, policy_for)
+from repro.ft.breaker import CLOSED, HALF_OPEN, OPEN
+from repro.ft.faults import SHED_POLICIES
+from repro.serve import Request, Scheduler
+
+
+def _prompt(n, seed=0):
+    return np.random.default_rng(seed).integers(1, 512, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_after_threshold_in_window():
+    br = CircuitBreaker("page", BreakerConfig(trip_after=3, window=8))
+    br.record_failure(0)
+    br.record_failure(1)
+    assert br.state == CLOSED and br.trips == 0
+    br.record_failure(2)
+    assert br.state == OPEN and br.trips == 1
+    assert br.failures_seen == 3
+
+
+def test_breaker_window_decay_prevents_trip():
+    """Failures spaced wider than the window never accumulate to a trip
+    — a rare blip per epoch is per-item recovery's job, not the
+    breaker's."""
+    br = CircuitBreaker("page", BreakerConfig(trip_after=3, window=4))
+    for t in (0, 10, 20, 30, 40):
+        br.record_failure(t)
+    assert br.state == CLOSED and br.trips == 0
+
+
+def test_breaker_open_skips_then_probes_half_open():
+    cfg = BreakerConfig(trip_after=1, probe_after=4)
+    br = CircuitBreaker("page", cfg)
+    br.record_failure(0)
+    assert br.state == OPEN
+    assert not br.allow(1) and not br.allow(3)
+    assert br.skipped == 2
+    assert br.allow(4)                         # first item at the deadline
+    assert br.state == HALF_OPEN
+    assert br.allow(4)                         # probing items stay allowed
+
+
+def test_breaker_probe_fail_reopens_on_decayed_schedule():
+    cfg = BreakerConfig(trip_after=1, probe_after=2, probe_backoff=2.0,
+                        probe_cap=8)
+    br = CircuitBreaker("page", cfg)
+    br.record_failure(0)                       # open, probe at 2
+    probe_ticks = []
+    t = 0
+    for _ in range(5):                         # probes at 2, 6, 14, 22, 30
+        while not br.allow(t):
+            t += 1
+        probe_ticks.append(t)
+        br.record_failure(t)                   # every probe fails
+    # waits decay 2 -> 4 -> 8 -> capped at 8
+    assert [b - a for a, b in zip(probe_ticks, probe_ticks[1:])] \
+        == [4, 8, 8, 8]
+    assert br.probe_fails == 5 and br.probes == 5
+    assert br.state == OPEN and br.trips == 1  # reopens are not new trips
+
+
+def test_breaker_closes_after_consecutive_passes():
+    cfg = BreakerConfig(trip_after=1, probe_after=1, close_after=2)
+    br = CircuitBreaker("page", cfg)
+    br.record_failure(0)
+    assert br.allow(1) and br.state == HALF_OPEN
+    br.record_success(1)
+    assert br.state == HALF_OPEN               # one pass is not enough
+    br.record_success(1)
+    assert br.state == CLOSED
+    assert br.probe_passes == 2
+    # a fail between passes resets the consecutive count
+    br2 = CircuitBreaker("page", cfg)
+    br2.record_failure(0)
+    br2.allow(1)
+    br2.record_success(1)
+    br2.record_failure(1)                      # back to open
+    assert br2.state == OPEN
+    br2.allow(3)
+    br2.record_success(3)
+    assert br2.state == HALF_OPEN              # count restarted at 1
+
+
+def test_breaker_label_and_snapshot():
+    br = CircuitBreaker("page", BreakerConfig(trip_after=1))
+    br.record_failure(0)
+    assert br.label() == "page:open(trips=1,probes=0,skipped=0)"
+    snap = br.snapshot()
+    assert snap["site"] == "page" and snap["state"] == OPEN
+    assert snap["trips"] == 1 and snap["failures_seen"] == 1
+
+
+def test_breaker_board_clock_and_aggregates():
+    board = BreakerBoard(BreakerConfig(trip_after=1, probe_after=2))
+    board.advance(5)
+    assert board.allow("page")                 # lazy site, closed
+    board.record_failure("page")
+    board.record_failure("ring")
+    assert board.tripped_sites() == ["page", "ring"]
+    assert board.trips == 2
+    assert not board.allow("page")             # open, probe at 7
+    board.advance(3)                           # monotone: max, never back
+    assert board.now == 5
+    board.advance(7)
+    assert board.allow("page")                 # the half-open probe
+    assert board.get("page").state == HALF_OPEN
+    assert [l.split("(")[0] for l in board.labels()] \
+        == ["page:half_open", "ring:open"]
+
+
+def test_breaker_scope_contextvar():
+    assert active_board() is None
+    board = BreakerBoard()
+    with breaker_scope(board):
+        assert active_board() is board
+        with breaker_scope(BreakerBoard()) as inner:
+            assert active_board() is inner
+        assert active_board() is board
+    assert active_board() is None
+
+
+def test_resolve_comms_breaker_open_degrades():
+    """An open "ring" breaker on the ambient board turns the whole layer
+    exchange dense — wholesale degradation above PR 8's per-hop
+    recovery."""
+    board = BreakerBoard(BreakerConfig(trip_after=1, probe_after=100))
+    with comm_context("model", 4):
+        ok = coll.resolve_comms("stream", rows=64, cols=512, bs=8, bc=128)
+        assert ok == ("compressed", None)
+        with breaker_scope(board):
+            assert coll.resolve_comms("stream", rows=64, cols=512,
+                                      bs=8, bc=128) == ("compressed", None)
+            board.record_failure(coll.RING_SITE)
+            assert coll.resolve_comms("stream", rows=64, cols=512,
+                                      bs=8, bc=128) == ("dense",
+                                                        "breaker-open")
+            # capability/divisibility vetoes still rank first
+            assert coll.resolve_comms("reference", rows=64, cols=512,
+                                      bs=8, bc=128) == ("dense",
+                                                        "comms-capability")
+        # out of scope: the board no longer applies
+        assert coll.resolve_comms("stream", rows=64, cols=512,
+                                  bs=8, bc=128) == ("compressed", None)
+
+
+# ---------------------------------------------------------------------------
+# shed fault classes + FailurePolicy
+# ---------------------------------------------------------------------------
+
+def test_shed_classes_classify_round_trip():
+    for exc_cls in (DeadlineExceeded, Overload):
+        assert classify(exc_cls("x")) is exc_cls
+        assert policy_for(exc_cls("x")) == "shed"
+        assert policy_for(exc_cls("x")) in SHED_POLICIES
+    assert classify(ValueError("not a fault")) is None  # unclassified
+    assert policy_for(ValueError("not a fault")) is None
+
+
+def test_failure_policy_shed_logged_never_counted():
+    pol = FailurePolicy(FTConfig(max_failures=2))
+    name = pol.record(Overload, 3, Overload("queue full"))
+    assert name == "shed"
+    assert pol.failures == 0                   # record never counts
+    assert pol.failure_log[-1]["policy"] == "shed"
+    assert pol.failure_log[-1]["step"] == 3
+    # countable classes go through count() — shed classes never do (the
+    # supervisor/engine skip count() for SHED_POLICIES)
+    pol.record(TransientStep, 4, TransientStep("t"))
+    assert pol.count() and pol.failures == 1
+    assert pol.count() and pol.failures == 2
+    assert not pol.count()                     # budget exhausted
+
+
+def test_backoff_bounded_under_any_seed():
+    for seed in range(6):
+        cfg = FTConfig(backoff_base_s=0.05, backoff_cap_s=2.0,
+                       backoff_jitter=0.25, jitter_seed=seed)
+        pol = FailurePolicy(cfg)
+        pol.failures = 50                      # deep into the cap regime
+        for _ in range(8):
+            d = pol.backoff()
+            assert 0.0 <= d <= cfg.backoff_cap_s * (1 + cfg.backoff_jitter)
+
+
+def test_backoff_jitter_streams_differ_by_seed():
+    def stream(seed):
+        pol = FailurePolicy(FTConfig(jitter_seed=seed))
+        pol.failures = 10
+        return [pol.backoff() for _ in range(4)]
+    assert stream(0) == stream(0)              # deterministic per seed
+    assert stream(0) != stream(1)              # decorrelated across seeds
+
+
+# ---------------------------------------------------------------------------
+# scheduler SLO policy
+# ---------------------------------------------------------------------------
+
+def test_deadline_anchors_to_original_arrival():
+    r = Request(rid=0, prompt=_prompt(8), max_new=4, arrival=3,
+                deadline_ticks=10)
+    assert r.deadline == 13
+    r.arrival = 99                             # preemption mutates arrival
+    assert r.deadline == 13                    # ... the TTL anchor doesn't
+
+
+def test_admit_sheds_unmeetable_deadline():
+    reqs = [Request(rid=0, prompt=_prompt(8), max_new=4, deadline_ticks=2),
+            Request(rid=1, prompt=_prompt(8), max_new=4, deadline_ticks=50)]
+    s = Scheduler(reqs)
+    got = s.admit(tick=0, free_slots=2, eta=lambda r: 10)
+    assert [r.rid for r in got] == [1]
+    assert reqs[0].status == "shed" and reqs[0].shed_reason == "deadline"
+    assert s.n_shed == 1 and s.deadline_misses == 1
+    # no deadline -> no check; eta default falls back to total_len
+    s2 = Scheduler([Request(rid=2, prompt=_prompt(8), max_new=4)])
+    assert [r.rid for r in s2.admit(tick=0, free_slots=1)] == [2]
+
+
+def test_admit_verdicts_never_vs_later():
+    reqs = [Request(rid=i, prompt=_prompt(8), max_new=4) for i in range(3)]
+    s = Scheduler(reqs)
+    verdicts = {0: "later", 1: "never", 2: "ok"}
+    got = s.admit(tick=0, free_slots=3, fits=lambda r: verdicts[r.rid])
+    assert [r.rid for r in got] == [2]
+    assert reqs[1].status == "rejected"
+    assert s.deferrals == 1
+    # the deferred request kept its FCFS position at the queue head
+    assert [r.rid for r in s.waiting] == [0]
+    assert reqs[0].status == "waiting"
+    # booleans still mean ok/never (PR 9 call sites)
+    s2 = Scheduler([Request(rid=9, prompt=_prompt(8), max_new=4)])
+    assert s2.admit(tick=0, free_slots=1, fits=lambda r: False) == []
+    assert s2.completed[0].status == "rejected"
+
+
+def test_shed_overflow_bounds_fresh_backlog_only():
+    fresh = [Request(rid=i, prompt=_prompt(8), max_new=4, arrival=i)
+             for i in range(5)]
+    wip = Request(rid=10, prompt=_prompt(8), max_new=4, arrival=0)
+    wip.pos = 6                                # paged progress: never shed
+    future = Request(rid=11, prompt=_prompt(8), max_new=4, arrival=50)
+    s = Scheduler(fresh + [wip, future], queue_bound=3)
+    victims = s.shed_overflow(tick=10)
+    # newest fresh beyond the bound go first; WIP and the not-yet-arrived
+    # request are invisible to the bound
+    assert [r.rid for r in victims] == [3, 4]
+    assert all(r.status == "shed" and r.shed_reason == "overload"
+               for r in victims)
+    assert s.n_shed == 2 and s.deadline_misses == 0
+    assert wip in s.waiting and future in s.waiting
+    # queue_bound=0 disables the bound entirely
+    s2 = Scheduler([Request(rid=i, prompt=_prompt(8), max_new=4)
+                    for i in range(8)], queue_bound=0)
+    assert s2.shed_overflow(tick=0) == []
+
+
+def test_scheduler_snapshot_restore_round_trip():
+    reqs = [Request(rid=i, prompt=_prompt(8), max_new=4) for i in range(3)]
+    s = Scheduler(reqs, queue_bound=4)
+    a, b, c = reqs
+    s.admit(tick=0, free_slots=2)              # a, b running
+    a.out.extend([7, 8]); a.pos = 10; a.next_tok = 8
+    snap = s.snapshot()
+    # mutate everything the snapshot covers
+    a.out.append(9); a.pos = 11; a.status = "done"
+    s.retire(a)
+    s.shed(c, "overload")
+    assert s.n_shed == 1 and len(s.completed) == 2
+    s.restore(snap)
+    assert a.out == [7, 8] and a.pos == 10 and a.status == "running"
+    assert c.status == "waiting" and c.shed_reason == ""
+    assert s.n_shed == 0 and s.completed == []
+    assert [r.rid for r in s.waiting] == [c.rid]
+    # the snapshot is a deep copy: restoring twice is idempotent
+    a.out.append(99)
+    s.restore(snap)
+    assert a.out == [7, 8]
+
+
+def test_requeue_front_preserves_arrival_and_ttl():
+    r = Request(rid=0, prompt=_prompt(8), max_new=4, arrival=2,
+                deadline_ticks=20)
+    s = Scheduler([Request(rid=1, prompt=_prompt(8), max_new=4)])
+    r.status = "running"; r.slot_steps = 5
+    s.requeue_front(r)
+    assert s.waiting[0] is r                   # ahead of the fresh request
+    assert r.status == "waiting" and r.slot_steps == 0
+    assert r.arrival == 2 and r.deadline == 22  # unlike preempt()
+
+
+# ---------------------------------------------------------------------------
+# crash tap
+# ---------------------------------------------------------------------------
+
+def test_crash_tap_fires_only_at_named_tick():
+    with inject(Fault("crash", site="engine_tick", arg=3)) as plan:
+        for t in (0, 1, 2):
+            crash_tap(t)                       # wrong tick: no fire
+        with pytest.raises(TransientStep, match="tick 3"):
+            crash_tap(3)
+        crash_tap(3)                           # times=1: exhausted
+        crash_tap(4)
+    assert plan.injected == [("crash", "engine_tick")]
+    crash_tap(3)                               # no plan armed: no-op
+
+
+# ---------------------------------------------------------------------------
+# gate red path
+# ---------------------------------------------------------------------------
+
+def _load_gate():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "scripts", "bench_gate.py")
+    spec = importlib.util.spec_from_file_location("bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+GOOD_STORM = {
+    "name": "serve_chaos/storm", "us_per_call": 1.0, "goodput_frac": 1.0,
+    "token_parity": 1.0, "crash_recoveries": 1, "breaker_trips": 1,
+    "breaker_trips_expected": 1, "breaker_recovered": 1.0,
+    "shed_frac": 0.1, "deadline_miss_frac": 0.0, "faults_injected": 7,
+}
+
+
+def _write_chaos(tmp_path, storm):
+    doc = {"bench": "serve_chaos", "schema_version": 1, "generated_unix": 0,
+           "rows": [{"name": "serve_chaos/clean", "us_per_call": 1.0}, storm]}
+    p = tmp_path / "BENCH_serve_chaos.json"
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_gate_serve_chaos_green_and_red(tmp_path):
+    gate = _load_gate()
+    assert "BENCH_serve_chaos.json" in gate.FILES
+    assert gate.gate_serve_chaos(_write_chaos(tmp_path, dict(GOOD_STORM))) \
+        == []
+    red = {
+        "goodput_frac": 0.5,                   # storm collapsed throughput
+        "token_parity": 0.0,                   # recovery corrupted tokens
+        "crash_recoveries": 0,                 # crash never recovered
+        "breaker_trips": 2,                    # != expected
+        "breaker_recovered": 0.0,              # breaker never closed
+        "shed_frac": 1.5,                      # not a fraction
+    }
+    for key, bad in red.items():
+        doctored = dict(GOOD_STORM, **{key: bad})
+        errs = gate.gate_serve_chaos(_write_chaos(tmp_path, doctored))
+        assert errs and key in errs[0], (key, errs)
+    # missing storm row / missing artifact
+    doc = {"bench": "serve_chaos", "schema_version": 1, "generated_unix": 0,
+           "rows": [{"name": "serve_chaos/clean", "us_per_call": 1.0}]}
+    p = tmp_path / "BENCH_serve_chaos.json"
+    p.write_text(json.dumps(doc))
+    assert gate.gate_serve_chaos(str(p)) != []
+    assert gate.gate_serve_chaos(str(tmp_path / "nope.json")) == []
+
+
+def test_gate_serve_chaos_red_path_against_committed_artifact(tmp_path):
+    """The committed artifact itself must pass — and a doctored copy of
+    it must fail — so the red path is verified against the REAL schema,
+    not a synthetic one."""
+    gate = _load_gate()
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    path = os.path.join(root, "BENCH_serve_chaos.json")
+    assert os.path.exists(path), "BENCH_serve_chaos.json not committed"
+    assert gate.gate_serve_chaos(path) == []
+    with open(path) as f:
+        doc = json.load(f)
+    for row in doc["rows"]:
+        if row["name"] == "serve_chaos/storm":
+            row["goodput_frac"] = 0.5          # collapse the goodput
+    p = tmp_path / "BENCH_serve_chaos.json"
+    p.write_text(json.dumps(doc))
+    errs = gate.gate_serve_chaos(str(p))
+    assert errs and "goodput_frac" in errs[0]

@@ -397,3 +397,174 @@ def test_model_prefill_pad_buckets_compile_count():
     _, state, _ = model_prefill_pad(prefill, params, prompts, 20, bucket=False)
     glb = [x for x in jax.tree_util.tree_leaves(state[0]) if x.shape[-3] == 20]
     assert glb, "exact-length pad lost"
+
+
+# ---------------------------------------------------------------------------
+# resilience: deadlines, shedding, breaker, crash recovery (PR 10)
+# ---------------------------------------------------------------------------
+
+def test_engine_report_deadline_miss_accounting():
+    """A request whose TTL cannot be met given the engine's slot-clock
+    estimate is shed at admission, and the report carries the SLO
+    accounting."""
+    eng, *_ = _engine(n_slots=2, max_cache_len=64)
+    reqs = [Request(rid=0, prompt=_prompt(12), max_new=6, deadline_ticks=2),
+            Request(rid=1, prompt=_prompt(12), max_new=6, deadline_ticks=64)]
+    rep = eng.run(reqs)
+    assert rep["n_requests"] == 1
+    assert rep["n_shed"] == 1 and rep["deadline_misses"] == 1
+    assert rep["deadline_miss_frac"] == 0.5 and rep["shed_frac"] == 0.5
+    shed = [r for r in eng.scheduler.completed if r.status == "shed"]
+    assert [r.rid for r in shed] == [0]
+    assert shed[0].shed_reason == "deadline"
+    assert rep["n_rejected"] == 0             # shed is NOT rejected
+
+
+def test_engine_cancels_lane_past_deadline_midflight():
+    eng, *_ = _engine(n_slots=1, max_cache_len=32)
+    eng.scheduler = Scheduler([Request(rid=0, prompt=_prompt(9), max_new=8)])
+    eng._schedule(0, time.time())
+    r = eng._lanes[0]
+    assert r is not None and r.rid in eng.pool
+    r.deadline = 3                            # TTL expires under the lane
+    eng._cancel_deadlines(4)
+    assert eng._lanes[0] is None
+    assert r.status == "shed" and r.shed_reason == "deadline"
+    assert r.rid not in eng.pool              # slab freed (unsupervised)
+    assert eng.scheduler.deadline_misses == 1
+
+
+def test_engine_queue_bound_sheds_overload_end_to_end():
+    """More fresh arrivals than the bound: the newest are shed with
+    reason "overload", the rest complete with tokens identical to an
+    unbounded run (shedding must not perturb survivors)."""
+    def trace():
+        return [Request(rid=i, prompt=_prompt(10, seed=30 + i), max_new=4)
+                for i in range(5)]
+    eng1, *_ = _engine(n_slots=2, max_cache_len=64)
+    eng1.run(trace())
+    base = {r.rid: r.out for r in eng1.scheduler.completed
+            if r.status == "done"}
+    eng2, *_ = _engine(n_slots=2, max_cache_len=64, queue_bound=2)
+    rep = eng2.run(trace())
+    shed = [r for r in eng2.scheduler.completed if r.status == "shed"]
+    assert len(shed) == 1 and shed[0].shed_reason == "overload"
+    assert shed[0].rid == 4                   # newest fresh arrival goes first
+    assert rep["n_requests"] == 4 and rep["n_shed"] == 1
+    for r in eng2.scheduler.completed:
+        if r.status == "done":
+            assert r.out == base[r.rid], f"rid {r.rid} perturbed by shedding"
+
+
+def test_crash_recovery_token_parity():
+    """The tentpole end-to-end: an injected engine crash mid-run
+    restores the snapshot and re-admits every in-flight request from its
+    paged compressed KV — and every request finishes with tokens
+    bitwise-equal to the un-crashed run, without replaying generated
+    tokens (the restored bookkeeping keeps them)."""
+    from repro.ft import FTConfig
+
+    def trace():
+        return [Request(rid=i, prompt=_prompt(10 + i, seed=40 + i),
+                        max_new=6) for i in range(3)]
+    eng1, *_ = _engine(n_slots=2, max_cache_len=64)
+    eng1.run(trace())
+    base = {r.rid: r.out for r in eng1.scheduler.completed}
+    assert all(len(out) == 6 for out in base.values())
+
+    eng2, *_ = _engine(n_slots=2, max_cache_len=64)
+    ft_cfg = FTConfig(max_failures=2, backoff_base_s=0.0)
+    with inject(Fault("crash", site="engine_tick", arg=4)) as plan:
+        rep = eng2.run(trace(), ft_cfg=ft_cfg)
+    assert plan.injected == [("crash", "engine_tick")]
+    assert rep["crash_recoveries"] == 1
+    assert rep["n_requests"] == 3             # nobody lost to the crash
+    assert rep["recovered_requests"] >= 1     # in-flight lanes survived
+    assert rep["retries"] >= 1
+    crashed = {r.rid: r for r in eng2.scheduler.completed}
+    for rid, out in base.items():
+        assert crashed[rid].out == out, f"rid {rid} diverged across the crash"
+    assert any(r.recovered for r in crashed.values())
+
+
+def test_crash_unsupervised_run_reraises():
+    eng, *_ = _engine(n_slots=1, max_cache_len=32)
+    with inject(Fault("crash", site="engine_tick", arg=1)):
+        with pytest.raises(Exception, match="injected engine crash"):
+            eng.run([Request(rid=0, prompt=_prompt(9), max_new=6)])
+
+
+def test_crash_retry_budget_exhaustion_sheds():
+    """A request whose crash re-admissions exhaust its retry budget is
+    shed with reason "retry-budget" instead of looping forever."""
+    from repro.ft import FTConfig
+    eng, *_ = _engine(n_slots=1, max_cache_len=32)
+    r = Request(rid=0, prompt=_prompt(9), max_new=6, retry_budget=0)
+    with inject(Fault("crash", site="engine_tick", arg=2)):
+        rep = eng.run([r], ft_cfg=FTConfig(max_failures=2,
+                                           backoff_base_s=0.0))
+    assert rep["crash_recoveries"] == 1
+    assert r.status == "shed" and r.shed_reason == "retry-budget"
+    assert rep["n_shed"] == 1 and rep["n_requests"] == 0
+    assert r.rid not in eng.pool              # slab freed with the shed
+
+
+def test_page_storm_trips_breaker_then_recovers():
+    """Persistent page-ingest corruption trips the page breaker to the
+    dense path wholesale (skipping per-page validate+fallback), half-open
+    probes fail against the remaining armed faults on the decayed
+    schedule, and the breaker closes once the storm exhausts — with the
+    served tokens identical to a clean run throughout."""
+    from repro.ft import BreakerConfig, FTConfig
+
+    def trace():
+        return [Request(rid=i, prompt=_prompt(12, seed=50 + i), max_new=6)
+                for i in range(2)]
+    eng1, *_ = _engine(n_slots=2, max_cache_len=64)
+    eng1.run(trace())
+    base = {r.rid: r.out for r in eng1.scheduler.completed}
+
+    brk = BreakerConfig(trip_after=2, window=32, probe_after=1,
+                        probe_backoff=2.0, probe_cap=4, close_after=1)
+    eng2, *_ = _engine(n_slots=2, max_cache_len=64, validation="structural",
+                       breaker=brk)
+    # supervised: snapshots page out every lane each tick, so the open
+    # breaker sees traffic to skip and the probes see traffic to test
+    # kind "count" (n_live += 1) is detectable on ANY page, including
+    # the all-dead zero-tail pages — detection stays 1:1 with injection
+    with inject(Fault("count", site="page", times=3)) as plan:
+        rep = eng2.run(trace(), ft_cfg=FTConfig(backoff_base_s=0.0))
+    assert [k for k, _ in plan.injected] == ["count"] * 3
+    page = rep["breakers"]["page"]
+    assert rep["breaker_trips"] == 1          # one trip; reopens don't count
+    assert rep["breaker_tripped_sites"] == ["page"]
+    assert page["probe_fails"] == 1           # fault 3 fails the first probe
+    assert page["state"] == "closed"          # storm exhausted: recovered
+    assert rep["pages_breaker_dense"] > 0     # open path actually skipped
+    # 2 pre-trip per-page fallbacks + 1 during the failed probe: every
+    # detection recovers the page dense even while the breaker reacts
+    assert rep["pages_recovered"] == 3
+    assert any("page:closed" in lbl for lbl in rep["breaker_labels"])
+    for r in eng2.scheduler.completed:
+        assert r.out == base[r.rid], f"rid {r.rid} corrupted by the storm"
+
+
+def test_fits_verdicts_never_later_ok():
+    """The hot-set position budget drives the transient "later" verdict:
+    infeasible-even-alone is "never", crowded-right-now is "later", and
+    the engine report counts the deferrals."""
+    eng, *_ = _engine(n_slots=2, max_cache_len=64)
+    eng.max_hot_positions = 128               # budget: 2 lanes x 64 cache
+    small = Request(rid=0, prompt=_prompt(10), max_new=6)   # bucket 32
+    big = Request(rid=1, prompt=_prompt(40), max_new=20)    # bucket 64
+    assert eng._fits(small, n_active=0) == "ok"
+    assert eng._fits(big, n_active=0) == "ok"               # 1x64 <= 128
+    eng._C = 64
+    assert eng._fits(small, n_active=1) == "ok"             # 2x64 == 128
+    eng.max_hot_positions = 64
+    assert eng._fits(small, n_active=1) == "later"          # crowded
+    assert eng._fits(small, n_active=0) == "ok"             # 1x64 == 64 alone
+    eng.max_hot_positions = 32        # budget below one lane's cache bucket
+    assert eng._fits(big, n_active=0) == "never"            # 1x64 > 32 alone
+    assert eng._fits(Request(rid=2, prompt=np.zeros(0, np.int32), max_new=1),
+                     n_active=0) == "never"                 # empty prompt
